@@ -1,0 +1,113 @@
+"""Paper Fig 1a + Fig 5b: model-switch loading cost vs inference vs
+SubNetAct in-place actuation.
+
+Loading latencies are analytic (weight bytes / effective PCIe+setup
+bandwidth — the paper's measured 2080Ti numbers calibrate the
+HardwareProfile); actuation latency is MEASURED on a real tiny JAX
+supernet on this host: the cost of switching the control tuple between
+two jitted calls, which is the entire SubNetAct actuation mechanism.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import banner, save, table
+from repro.configs import get_config
+from repro.core import pareto, subnet as sn
+from repro.core.pareto import pareto_subnets
+from repro.models import lm
+from repro.serving import profiler
+from tests.conftest import tiny_dense
+
+
+def measured_actuation_latency() -> dict:
+    """Wall-clock control-tuple swap on a real supernet (CPU)."""
+    cfg = tiny_dense()
+    params = lm.init_model(jax.random.PRNGKey(0), cfg)
+    pts = pareto_subnets(cfg)
+    ctrls = [sn.make_control(cfg, p.sub) for p in pts]
+    stacked = {k: jnp.stack([jnp.asarray(c[k]) for c in ctrls]) for k in ctrls[0]}
+    toks = jnp.ones((4, 16), jnp.int32)
+
+    @jax.jit
+    def step(idx):
+        ctrl = {k: v[idx] for k, v in stacked.items()}
+        return lm.prefill(params, cfg, {"tokens": toks}, ctrl)
+
+    # warm both subnets (one compile serves all — assert no retrace)
+    jax.block_until_ready(step(jnp.int32(0)))
+    jax.block_until_ready(step(jnp.int32(len(pts) - 1)))
+
+    n = 200
+    t0 = time.perf_counter()
+    for i in range(n):
+        jax.block_until_ready(step(jnp.int32(i % len(pts))))
+    t_switch = (time.perf_counter() - t0) / n
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(step(jnp.int32(0)))
+    t_same = (time.perf_counter() - t0) / n
+    return {"steady_same_subnet_s": t_same, "steady_switching_s": t_switch,
+            "actuation_overhead_s": max(t_switch - t_same, 0.0)}
+
+
+def run() -> dict:
+    banner("bench_actuation (paper Fig 1a / Fig 5b)")
+    cfg = get_config("ofa_resnet")
+    hw = profiler.RTX2080TI
+    pts = pareto.uniform_sample(pareto_subnets(cfg), 6)
+
+    rows = []
+    for p in pts:
+        wb = pareto.subnet_weight_bytes(cfg, p.sub, resident=False)
+        f = pareto.subnet_flops(cfg, p.sub)
+        t_load = profiler.loading_latency(hw, wb)
+        t_inf16 = profiler.model_latency(hw, f, wb, 16)
+        rows.append([f"{p.acc:.2f}%", f"{p.gflops:.2f}",
+                     f"{wb/2**20:.0f} MB", f"{t_load*1e3:.1f} ms",
+                     f"{t_inf16*1e3:.1f} ms", f"{t_load/t_inf16:.1f}x"])
+    print(table(["subnet acc", "GFLOPs", "weights", "load", "infer B=16",
+                 "load/infer"], rows))
+
+    act = measured_actuation_latency()
+    print(f"\nSubNetAct actuation (measured, real JAX supernet): "
+          f"{act['actuation_overhead_s']*1e6:.0f} us overhead per switch "
+          f"(steady-state step {act['steady_same_subnet_s']*1e3:.2f} ms)")
+    mean_load = float(np.mean([profiler.loading_latency(
+        hw, pareto.subnet_weight_bytes(cfg, p.sub, resident=False))
+        for p in pts]))
+    speedup = mean_load / max(act["actuation_overhead_s"], 1e-7)
+    print(f"actuation is {speedup:.0f}x faster than on-demand loading "
+          f"(mean over the 6 subnets; paper Fig 5b: orders of magnitude)")
+
+    payload = {
+        "loading_vs_inference": [
+            {"acc": p.acc, "gflops": p.gflops,
+             "load_s": profiler.loading_latency(
+                 hw, pareto.subnet_weight_bytes(cfg, p.sub, resident=False)),
+             "infer16_s": profiler.model_latency(
+                 hw, pareto.subnet_flops(cfg, p.sub),
+                 pareto.subnet_weight_bytes(cfg, p.sub, resident=False), 16)}
+            for p in pts],
+        "actuation": act,
+        "claims": {
+            "load_exceeds_infer_b16": all(
+                profiler.loading_latency(
+                    hw, pareto.subnet_weight_bytes(cfg, p.sub, resident=False))
+                > profiler.model_latency(
+                    hw, pareto.subnet_flops(cfg, p.sub),
+                    pareto.subnet_weight_bytes(cfg, p.sub, resident=False), 16)
+                for p in pts),
+            "actuation_orders_of_magnitude_faster": speedup > 100,
+        },
+    }
+    save("actuation", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Paper Fig 13 / §A.4: the control-parameter space — latency heatmap
+over (accuracy x batch) for six FLOPs-uniform pareto subnets, and the
+bucket-occupancy histogram (I3: choices thin out at high latency)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import banner, save, table
+from repro.configs import get_config
+from repro.core.pareto import pareto_subnets, uniform_sample
+from repro.serving import profiler
+
+
+def run() -> dict:
+    banner("bench_control_space (paper Fig 13)")
+    cfg = get_config("ofa_resnet")
+    prof = profiler.build_profile(cfg)
+    pts = pareto_subnets(cfg)
+    six = uniform_sample(pts, 6)
+    six_idx = [pts.index(p) for p in six]
+
+    rows = []
+    for i in six_idx:
+        rows.append([f"{prof.accs[i]:.2f}%"] +
+                    [f"{prof.lat[i, j]*1e3:.1f}" for j in range(len(prof.batches))])
+    print(table(["acc \\ B"] + [str(b) for b in prof.batches], rows))
+
+    # monotonicity checks (P1, P2) + P3 slope growth
+    p1 = bool((np.diff(prof.lat, axis=1) >= -1e-12).all())
+    order = np.argsort(prof.accs)
+    p2 = bool((np.diff(prof.lat[order], axis=0) >= -1e-9).all())
+    gaps = prof.lat[order, -1] - prof.lat[order, 0]
+    p3 = bool((np.diff(gaps) >= -1e-9).all())
+
+    sizes = [len(m) for m in prof.bucket_members]
+    print("\nbucket occupancy (low->high latency):", sizes)
+    i3 = float(np.mean(sizes[: len(sizes) // 3])) >= \
+        float(np.mean(sizes[-len(sizes) // 3:]))
+    print(f"P1={p1} P2={p2} P3={p3} I3(choices thin out)={i3}")
+
+    payload = {
+        "heatmap": {f"{prof.accs[i]:.2f}":
+                    [float(x) for x in prof.lat[i]] for i in six_idx},
+        "batches": list(prof.batches),
+        "bucket_occupancy": sizes,
+        "claims": {"P1": p1, "P2": p2, "P3": p3, "I3": bool(i3)},
+    }
+    save("control_space", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

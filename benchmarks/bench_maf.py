@@ -1,0 +1,72 @@
+"""Paper Fig 10: the real-world (MAF-derived) workload — 24h Azure
+Functions trace shape-preservingly shrunk to ~120s at ~6400 qps mean,
+periodic spikes to ~8750 qps. SuperServe headline: 4.67% higher
+accuracy at the same SLO attainment / 2.85x SLO attainment at the same
+accuracy vs Clipper+/INFaaS; plus the Fig 10b system dynamics."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import banner, save, table
+from repro.configs import get_config
+from repro.serving import policies, profiler, simulator, traces
+
+
+def run(duration: float = 60.0) -> dict:
+    banner("bench_maf (paper Fig 10)")
+    cfg = get_config("ofa_resnet")
+    prof = profiler.build_profile(cfg)
+    arr = traces.maf_like_trace(6400, duration, seed=42)
+    rate, cv2 = traces.trace_stats(arr)
+    print(f"trace: {len(arr)} queries, mean {rate:.0f} qps, CV^2={cv2:.1f}")
+
+    scfg = simulator.SimConfig(n_workers=8, slo=0.036)
+    pols = [policies.SlackFit(), policies.INFaaSMinCost()]
+    idxs = np.linspace(0, prof.n_pareto - 1, 6).round().astype(int)
+    pols += [policies.ClipperFixed(int(i), f"clipper+({prof.accs[i]:.2f})")
+             for i in idxs]
+
+    rows = []
+    for pol in pols:
+        res = simulator.simulate(arr, prof, pol, scfg)
+        rows.append({"policy": pol.name, "slo": res.slo_attainment,
+                     "acc": res.mean_acc})
+        if pol.name == "slackfit":
+            dyn = res.series(2.0)
+    print(table(["policy", "SLO", "acc"],
+                [[r["policy"], f"{r['slo']:.5f}", f"{r['acc']:.2f}"] for r in rows]))
+
+    sf = rows[0]
+    base999 = [r for r in rows[1:] if r["slo"] >= sf["slo"] - 1e-4]
+    acc_gain = sf["acc"] - max(r["acc"] for r in base999) if base999 else None
+    near = [r for r in rows[1:] if r["acc"] >= sf["acc"] - 0.05 and r["slo"] > 0]
+    slo_factor = sf["slo"] / max(r["slo"] for r in near) if near else None
+    print(f"\nheadline: +{acc_gain:.2f}% acc at same SLO (paper: +4.65); "
+          f"{slo_factor:.2f}x SLO at same acc (paper: 2.85x)")
+
+    # Fig 10b dynamics: accuracy dips during qps spikes
+    spikes = dyn[dyn[:, 1] > np.percentile(dyn[:, 1], 85)]
+    calm = dyn[dyn[:, 1] < np.percentile(dyn[:, 1], 25)]
+    print(f"dynamics: acc {calm[:,3].mean():.2f} in valleys vs "
+          f"{spikes[:,3].mean():.2f} in spikes; batch {calm[:,2].mean():.1f} "
+          f"-> {spikes[:,2].mean():.1f}")
+
+    payload = {
+        "results": rows,
+        "acc_gain_same_slo": acc_gain,
+        "slo_factor_same_acc": slo_factor,
+        "dynamics": dyn.tolist(),
+        "claims": {
+            "slackfit_slo_five_nines": sf["slo"] >= 0.999,
+            "acc_gain_positive": (acc_gain or 0) > 1.0,
+            "slo_factor_gt_2": (slo_factor or 0) > 2.0,
+            "accuracy_adapts_to_spikes":
+                bool(calm[:, 3].mean() > spikes[:, 3].mean()),
+        },
+    }
+    save("maf", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

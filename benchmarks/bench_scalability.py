@@ -1,0 +1,53 @@
+"""Paper Fig 11b: linear scaling — max sustained qps at 0.999 SLO as
+the worker pool grows (fixed small model, client batches of 8, CV^2=0,
+no adaptive batching — the paper's microbenchmark setup)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import banner, save, table
+from repro.configs import get_config
+from repro.serving import policies, profiler, simulator, traces
+
+WORKERS = (1, 2, 4, 8, 16, 32)
+
+
+def max_sustained(prof, n_workers: int) -> float:
+    pol = policies.ClipperFixed(0)          # smallest subnet (ResNet18-ish)
+    scfg = simulator.SimConfig(n_workers=n_workers, slo=0.036)
+    lo, hi = 50.0, 12_000.0 * n_workers
+    for _ in range(16):
+        mid = (lo + hi) / 2
+        # clients submit batches of 8 -> model as rate/8 dispatches of 8
+        arr = traces.bursty_trace(mid / 8, 0.0, 0.0, duration=2.0, seed=0)
+        res = simulator.simulate(arr, prof, pol, scfg)
+        if res.slo_attainment >= 0.999:
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+def run() -> dict:
+    banner("bench_scalability (paper Fig 11b)")
+    cfg = get_config("ofa_resnet")
+    prof = profiler.build_profile(cfg, batches=(8,), n_buckets=4)
+    rows, out = [], {}
+    for w in WORKERS:
+        qps = max_sustained(prof, w)
+        out[w] = qps
+        rows.append([w, f"{qps:.0f}"])
+    print(table(["workers", "max qps @ 0.999 SLO"], rows))
+    per_worker = {w: q / w for w, q in out.items()}
+    lin = per_worker[WORKERS[-1]] / per_worker[WORKERS[0]]
+    print(f"\nper-worker throughput ratio (32w vs 1w): {lin:.2f} "
+          f"(1.0 = perfectly linear; paper reaches 33k qps)")
+    payload = {"qps_by_workers": out, "linearity": lin,
+               "claims": {"near_linear": lin > 0.85,
+                          "tops_30k_at_32_workers": out[32] > 30_000}}
+    save("scalability", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Shared benchmark plumbing: result persistence + table rendering."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def save(name: str, payload: Dict[str, Any]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+
+
+def table(headers: List[str], rows: List[List[Any]]) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(headers)]
+    line = " | ".join(str(h).ljust(w) for h, w in zip(headers, widths))
+    sep = "-+-".join("-" * w for w in widths)
+    body = "\n".join(" | ".join(str(c).ljust(w) for c, w in zip(r, widths))
+                     for r in rows)
+    return f"{line}\n{sep}\n{body}"
+
+
+def banner(title: str) -> None:
+    print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")

@@ -1,0 +1,75 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--skip NAME]
+
+Each bench prints its table, persists results/bench/<name>.json, and
+returns a ``claims`` dict of paper-claim booleans; the runner prints
+the claim scoreboard at the end (EXPERIMENTS.md consumes it).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_acceleration, bench_actuation, bench_bursty_grid,
+                        bench_ilp_oracle,
+                        bench_control_space, bench_fault_tolerance, bench_maf,
+                        bench_memory, bench_pareto, bench_policies,
+                        bench_scalability, bench_throughput_range)
+from benchmarks.common import banner, save, table
+
+ALL = {
+    "actuation": bench_actuation.run,            # Fig 1a / 5b
+    "memory": bench_memory.run,                  # Fig 4 / 5a
+    "pareto": bench_pareto.run,                  # Fig 2
+    "throughput_range": bench_throughput_range.run,   # Fig 5c
+    "control_space": bench_control_space.run,    # Fig 13
+    "bursty_grid": bench_bursty_grid.run,        # Fig 8
+    "acceleration": bench_acceleration.run,      # Fig 9
+    "maf": bench_maf.run,                        # Fig 10
+    "fault_tolerance": bench_fault_tolerance.run,  # Fig 11a
+    "scalability": bench_scalability.run,        # Fig 11b
+    "policies": bench_policies.run,              # Fig 11c
+    "ilp_oracle": bench_ilp_oracle.run,          # SS4.2.1 Eq. 1
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--skip", nargs="*", default=[])
+    args = ap.parse_args(argv)
+
+    names = args.only or list(ALL)
+    scoreboard, failures = [], []
+    for name in names:
+        if name in args.skip:
+            continue
+        t0 = time.time()
+        try:
+            payload = ALL[name]()
+            for claim, ok in (payload.get("claims") or {}).items():
+                scoreboard.append([name, claim, "PASS" if ok else "FAIL"])
+                if not ok:
+                    failures.append((name, claim))
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            scoreboard.append([name, "<ran>", f"ERROR: {e!r}"])
+            failures.append((name, repr(e)))
+        print(f"[{name}: {time.time()-t0:.1f}s]")
+
+    banner("PAPER-CLAIM SCOREBOARD")
+    print(table(["benchmark", "claim", "status"], scoreboard))
+    save("scoreboard", {"rows": scoreboard,
+                        "failures": [list(f) for f in failures]})
+    if failures:
+        print(f"\n{len(failures)} claim(s) not reproduced")
+        return 1
+    print("\nall paper claims reproduced")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

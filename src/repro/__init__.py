@@ -1,0 +1,5 @@
+"""SuperServe in JAX: SubNetAct (instant in-place subnet actuation in
+weight-shared SuperNets) + SlackFit (fine-grained reactive scheduling),
+built as a multi-pod TPU framework. See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""SubNetAct core: the control space Phi, the three operators, Pareto
+NAS + predictors, and SubnetNorm calibration."""

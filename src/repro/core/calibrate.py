@@ -1,0 +1,101 @@
+"""SubnetNorm calibration (paper §3, "SubnetNorm" operator).
+
+Naive LayerSelect/WeightSlice drops subnet accuracy by up to 10% because
+shared normalization statistics are wrong for every subnet but the one
+they were computed on. SubnetNorm fixes this by *precomputing* per-subnet
+(mu_{i,j}, sigma_{i,j}) for each subnet i and norm site j via forward
+passes on calibration data — done offline by the Supernet Profiler,
+never on the query critical path.
+
+This module implements that calibration for the conv supernet's true
+BatchNorm tables. RMSNorm/LayerNorm LMs are *stat-free*: their
+SubnetNorm is the per-subnet gamma(/beta) tables trained jointly with
+the supernet (training/supernet.py) — there are no activation statistics
+to precompute, which we note in DESIGN.md §Changed-assumptions.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.subnet import SubnetDescriptor, enumerate_space, stage_gates
+from repro.models import convnet
+
+
+def _site_tables(params) -> Dict[str, Dict]:
+    """Map site key -> BN table dict inside the param tree (by reference)."""
+    sites = {"stem": params["stem"]["bn"]}
+    for si, units in enumerate(params["stages"]):
+        for r, u in enumerate(units):
+            pre = f"s{si}u{r}."
+            sites[pre + "bn1"] = u["bn1"]
+            sites[pre + "bn2"] = u["bn2"]
+            sites[pre + "bn3"] = u["bn3"]
+            if "bn_proj" in u:
+                sites[pre + "bn_proj"] = u["bn_proj"]
+    return sites
+
+
+def calibrate_convnet(params, cfg: ArchConfig, batches: Iterable[jnp.ndarray],
+                      subnets: Sequence[SubnetDescriptor] | None = None,
+                      momentum: float = 0.0):
+    """Fill the per-subnet BN (mean, var) table rows for every subnet.
+
+    ``batches``: iterable of image batches (B, H, W, 3) — the paper uses
+    training data. Returns the updated param tree (functionally).
+    """
+    subnets = list(subnets if subnets is not None else enumerate_space(cfg))
+    batches = list(batches)
+    if not batches:
+        raise ValueError("calibration requires at least one batch")
+
+    collect = jax.jit(
+        lambda p, x, ctrl, gates: convnet.convnet_forward(
+            p, cfg, x, ctrl, collect_stats=True, static_gates=gates)[1],
+        static_argnames=("gates",))
+
+    # Accumulate per-subnet running stats over the calibration set.
+    new_params = params
+    for sub in subnets:
+        ctrl = convnet.make_conv_control(cfg, sub)
+        gates = tuple(bool(g) for g in stage_gates(cfg, sub.depth_frac))
+        acc: Dict[str, List] = {}
+        for x in batches:
+            stats = collect(params, x, ctrl, gates)
+            for site, (mu, var) in stats.items():
+                acc.setdefault(site, []).append((np.asarray(mu), np.asarray(var)))
+        sid = int(sub.subnet_id)
+        sites = _site_tables(new_params)
+        for site, ms in acc.items():
+            mu = np.mean([m for m, _ in ms], axis=0)
+            # law of total variance across batches
+            var = (np.mean([v for _, v in ms], axis=0)
+                   + np.var([m for m, _ in ms], axis=0))
+            t = sites[site]
+            t["mean"] = t["mean"].at[sid].set(jnp.asarray(mu))
+            t["var"] = t["var"].at[sid].set(jnp.asarray(var))
+    return new_params
+
+
+def norm_table_bytes(params) -> int:
+    """Bytes of non-shared SubnetNorm bookkeeping (paper Fig. 4 numerator)."""
+    total = 0
+    for t in _site_tables(params).values():
+        total += t["mean"].size * t["mean"].dtype.itemsize
+        total += t["var"].size * t["var"].dtype.itemsize
+    return total
+
+
+def shared_weight_bytes(params) -> int:
+    """Bytes of shared (non-norm-table) weights (paper Fig. 4 denominator)."""
+    site_ids = {id(t["mean"]) for t in _site_tables(params).values()}
+    site_ids |= {id(t["var"]) for t in _site_tables(params).values()}
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        if id(leaf) not in site_ids:
+            total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,161 @@
+"""SubNetAct's three operators, as TPU-native JAX primitives.
+
+* :func:`layer_select`  — control-flow gate around a block (paper's
+  LayerSelect). ``lax.cond`` on a traced boolean: one executable serves
+  every depth; a skipped layer costs a predicate, not FLOPs.
+* :func:`subnet_norm`   — normalization with *per-subnet* non-shared
+  parameters gathered by ``subnet_id`` (paper's SubnetNorm). For the
+  RMSNorm LMs these are per-subnet gain tables; for the conv supernet
+  (paper's own arch) true BatchNorm mu/sigma tables.
+* :func:`sliced_matmul` / :func:`slice_mask` — WeightSlice. Two modes:
+  ``mask``   : full-shape matmul with channel masks (paper-faithful
+               routing semantics; zero shape dynamism),
+  ``switch`` : ``lax.switch`` over the discrete OFA width options, each
+               branch a statically-shaped prefix-slice matmul aliasing
+               the same resident weights (real MXU savings, TPU-native).
+
+All control inputs are *values*, never shapes — actuation never
+recompiles.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# --------------------------------------------------------------------------
+# LayerSelect
+# --------------------------------------------------------------------------
+
+
+def layer_select(gate, block_fn: Callable, x):
+    """Run ``block_fn(x)`` if ``gate`` else identity (pure x -> x blocks).
+
+    A skipped layer costs a predicate, not FLOPs or weight DMA."""
+    return lax.cond(gate, block_fn, lambda y: y, x)
+
+
+def layer_select_pair(gate, block_fn: Callable, x, state):
+    """LayerSelect for blocks of signature ``(x, state) -> (x, state)``."""
+    return lax.cond(gate, lambda: block_fn(x, state), lambda: (x, state))
+
+
+# --------------------------------------------------------------------------
+# SubnetNorm
+# --------------------------------------------------------------------------
+
+
+def subnet_norm(x, gamma_table, subnet_id, *, beta_table=None, eps: float = 1e-5,
+                kind: str = "rmsnorm"):
+    """Normalize ``x`` with per-subnet parameters.
+
+    ``gamma_table``: (n_subnets, d) — the non-shared bookkeeping that is
+    ~500x smaller than the shared weights (paper Fig. 4). ``subnet_id``
+    is a traced int32 scalar: the gather is the whole actuation cost.
+    """
+    gamma = jnp.take(gamma_table, subnet_id, axis=0)
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * lax.rsqrt(var + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    y = y * gamma.astype(jnp.float32)
+    if beta_table is not None:
+        y = y + jnp.take(beta_table, subnet_id, axis=0).astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def subnet_batch_norm(x, mean_table, var_table, gamma, beta, subnet_id,
+                      eps: float = 1e-5):
+    """True BatchNorm SubnetNorm for the conv supernet (paper's arch).
+
+    ``mean_table``/``var_table``: (n_subnets, C) precomputed by
+    calibration forward passes (core/calibrate.py). gamma/beta shared.
+    x: (B, H, W, C).
+    """
+    mu = jnp.take(mean_table, subnet_id, axis=0)
+    var = jnp.take(var_table, subnet_id, axis=0)
+    xf = x.astype(jnp.float32)
+    y = (xf - mu) * lax.rsqrt(var + eps) * gamma + beta
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# WeightSlice
+# --------------------------------------------------------------------------
+
+
+def channel_mask(width: int, active, dtype=jnp.float32):
+    """(width,) mask of the first ``active`` channels (OFA channel
+    sorting ⇒ importance-ranked prefix)."""
+    return (lax.iota(jnp.int32, width) < active).astype(dtype)
+
+
+def slice_mask(x, active, axis: int = -1):
+    """Zero all channels of ``x`` beyond ``active`` along ``axis``."""
+    width = x.shape[axis]
+    m = channel_mask(width, active, x.dtype)
+    shape = [1] * x.ndim
+    shape[axis] = width
+    return x * m.reshape(shape)
+
+
+def sliced_matmul(x, w, active_in, active_out, *, mode: str = "mask",
+                  in_options: Sequence[int] = (), out_options: Sequence[int] = (),
+                  bucket=None, precision=None):
+    """WeightSlice matmul: ``y = x[..., :k_in] @ w[:k_in, :k_out]`` with
+    output zero-padded to w.shape[-1].
+
+    mask mode:   traced ``active_in/active_out`` (any value), full FLOPs.
+    switch mode: ``bucket`` indexes the static (in_options x out_options)
+                 grid; each branch is a statically sliced matmul.
+    """
+    if mode == "mask":
+        xm = slice_mask(x, active_in) if active_in is not None else x
+        y = jnp.matmul(xm, w, precision=precision)
+        return slice_mask(y, active_out) if active_out is not None else y
+
+    if mode == "switch":
+        ins = list(in_options) or [w.shape[0]]
+        outs = list(out_options) or [w.shape[1]]
+        # bucket enumerates the zipped (not crossed) option list when the
+        # two dims are driven by the same control knob.
+        n = max(len(ins), len(outs))
+        ins = ins * n if len(ins) == 1 else ins
+        outs = outs * n if len(outs) == 1 else outs
+
+        def make_branch(k_in: int, k_out: int):
+            def branch():
+                xs = x[..., :k_in]
+                ws = lax.slice(w, (0, 0), (k_in, k_out))
+                y = jnp.matmul(xs, ws, precision=precision)
+                pad = w.shape[1] - k_out
+                if pad:
+                    y = jnp.pad(y, [(0, 0)] * (y.ndim - 1) + [(0, pad)])
+                return y
+            return branch
+
+        branches = [make_branch(ki, ko) for ki, ko in zip(ins, outs)]
+        return lax.switch(jnp.clip(bucket, 0, n - 1), branches)
+
+    raise ValueError(f"unknown WeightSlice mode {mode!r}")
+
+
+def switch_over_widths(bucket, options: Sequence[int], fn: Callable[[int], jnp.ndarray]):
+    """Generic WeightSlice switch: ``fn(k)`` built per static width k.
+
+    Used to wrap whole sub-blocks (e.g. attention with k active heads)
+    where the elastic dim is interior to the computation. All branches
+    must return identical shapes.
+    """
+    opts = list(options)
+    branches = [partial(fn, k) for k in opts]
+    return lax.switch(jnp.clip(bucket, 0, len(opts) - 1), branches)

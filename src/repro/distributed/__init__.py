@@ -1,0 +1,2 @@
+"""Distribution layer: ShardingPlan (DP/TP/EP/SP over the production
+mesh), explicit shard_map collectives, and elastic resharding."""

@@ -1,0 +1,43 @@
+"""Elastic scaling: reshard a live pytree (params / optimizer state /
+caches) onto a *different* mesh — the mechanism behind
+checkpoint-on-mesh-A / restore-on-mesh-B and in-place pool resizing
+after node failures.
+
+On real multi-host TPU this goes through jax.device_put with the new
+NamedShardings (XLA moves only the bytes that change owners); the same
+code path runs here on the CPU placeholder mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import ShardingPlan
+
+
+def reshard(tree: Any, new_plan: ShardingPlan,
+            shardings_of: Callable[[ShardingPlan, Any], Any]) -> Any:
+    """Move ``tree`` onto ``new_plan.mesh`` with the plan's shardings.
+
+    ``shardings_of(plan, tree)`` selects which rule family applies
+    (plan.params / plan.cache / plan.replicated).
+    """
+    shardings = shardings_of(new_plan, tree)
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def reshard_params(tree: Any, new_plan: ShardingPlan) -> Any:
+    return reshard(tree, new_plan, lambda p, t: p.params(t))
+
+
+def shrink_mesh(mesh: Mesh, cfg, *, drop_axis: str = "data", factor: int = 2) -> Mesh:
+    """A degraded mesh after losing ``factor``-worth of ``drop_axis``
+    (node failures): rebuild from the surviving devices."""
+    import numpy as np
+    devs = np.asarray(mesh.devices)
+    idx = [slice(None)] * devs.ndim
+    ax = mesh.axis_names.index(drop_axis)
+    idx[ax] = slice(0, devs.shape[ax] // factor)
+    return Mesh(devs[tuple(idx)], mesh.axis_names)

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (with BlockSpec VMEM tiling) + jit'd dispatch
+wrappers (ops.py) + pure-jnp oracles (ref.py)."""

@@ -1,0 +1,56 @@
+"""Backend dispatch for the Pallas kernels.
+
+On TPU the real kernels run; everywhere else (this CPU container, unit
+tests) they execute in Pallas interpret mode or fall back to the
+pure-jnp reference — same semantics either way, asserted by the kernel
+sweep tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.sliced_matmul import sliced_matmul as _sliced_pallas
+from repro.kernels.subnet_rmsnorm import subnet_rmsnorm as _rmsnorm_pallas
+
+
+@functools.lru_cache(maxsize=1)
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, kv_len=None,
+                    q_block=256, kv_block=256, interpret=None):
+    interp = (not on_tpu()) if interpret is None else interpret
+    return _flash_pallas(q, k, v, causal=causal, window=window, kv_len=kv_len,
+                         q_block=q_block, kv_block=kv_block, interpret=interp)
+
+
+def decode_attention(q, k_cache, v_cache, index, *, window=0, kv_block=256,
+                     interpret=None):
+    interp = (not on_tpu()) if interpret is None else interpret
+    return _decode_pallas(q, k_cache, v_cache, index, window=window,
+                          kv_block=kv_block, interpret=interp)
+
+
+def sliced_matmul(x, w, active_in, active_out, *, bm=128, bk=128, bn=128,
+                  interpret=None):
+    interp = (not on_tpu()) if interpret is None else interpret
+    return _sliced_pallas(x, w, active_in, active_out, bm=bm, bk=bk, bn=bn,
+                          interpret=interp)
+
+
+def subnet_rmsnorm(x, gamma_table, subnet_id, *, eps=1e-5, interpret=None):
+    interp = (not on_tpu()) if interpret is None else interpret
+    return _rmsnorm_pallas(x, gamma_table, subnet_id, eps=eps, interpret=interp)
+
+
+# references re-exported for tests
+flash_attention_ref = ref.flash_attention_ref
+decode_attention_ref = ref.decode_attention_ref
+sliced_matmul_ref = ref.sliced_matmul_ref
+subnet_rmsnorm_ref = ref.subnet_rmsnorm_ref

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the tests' ground truth).
+
+Each function computes the *mathematical* result with no tiling or
+online accumulation — O(S^2) memory where applicable — so kernel sweeps
+can assert_allclose against an independent implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sliced_matmul_ref(x, w, active_in: int, active_out: int):
+    """y = x[..., :k_in] @ w[:k_in, :k_out], zero-padded to w.shape[1].
+
+    WeightSlice semantics: channels beyond the active widths contribute
+    nothing and produce nothing."""
+    K, N = w.shape
+    ki = jnp.minimum(active_in, K)
+    ko = jnp.minimum(active_out, N)
+    xm = x * (jnp.arange(K) < ki).astype(x.dtype)
+    y = jnp.matmul(xm.astype(jnp.float32), w.astype(jnp.float32))
+    return (y * (jnp.arange(N) < ko).astype(y.dtype)).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        kv_len=None, scale=None):
+    """Full-softmax attention. q: (B,Hq,Sq,d); k/v: (B,Hkv,Sk,d)."""
+    B, Hq, Sq, d = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.reshape(B, Hkv, G, Sq, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if kv_len is not None:
+        mask &= k_pos[None, :] < kv_len
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key attend to nothing (match kernel semantics)
+    p = p * mask.any(-1)[None, None, None, :, None]
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, d).astype(v.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, index, *, window: int = 0):
+    """Single-token attention over a cache. q: (B,Hq,1,d);
+    caches: (B,Hkv,Smax,d); index = current absolute position."""
+    B, Hq, _, d = q.shape
+    _, Hkv, Smax, _ = k_cache.shape
+    G = Hq // Hkv
+    qf = q.reshape(B, Hkv, G, d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, k_cache.astype(jnp.float32)) * d ** -0.5
+    pos = jnp.arange(Smax)
+    if window:
+        age = (index - pos) % Smax
+        mask = age < jnp.minimum(window, index + 1)
+    else:
+        mask = pos <= index
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, 1, d).astype(v_cache.dtype)
+
+
+def subnet_rmsnorm_ref(x, gamma_table, subnet_id, eps: float = 1e-5):
+    """RMSNorm with the per-subnet gain row (SubnetNorm)."""
+    gamma = gamma_table[subnet_id]
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * gamma).astype(x.dtype)

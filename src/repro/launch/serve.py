@@ -1,0 +1,69 @@
+"""Serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch ofa_resnet \
+        --policy slackfit --trace bursty --rate 7000 --cv2 8 --duration 10
+
+Drives the production serving stack at full scale through the
+discrete-event engine (the real asyncio runtime is demonstrated by
+examples/serve_bursty.py on this host's actual devices).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.serving import policies, profiler, simulator, traces
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="ofa_resnet")
+    ap.add_argument("--policy", default="slackfit",
+                    choices=sorted(policies.ALL_POLICIES) + ["clipper"])
+    ap.add_argument("--clipper-idx", type=int, default=-1)
+    ap.add_argument("--trace", default="bursty",
+                    choices=("bursty", "time_varying", "maf"))
+    ap.add_argument("--rate", type=float, default=7000)
+    ap.add_argument("--cv2", type=float, default=4)
+    ap.add_argument("--tau", type=float, default=500)
+    ap.add_argument("--duration", type=float, default=10.0)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--slo-ms", type=float, default=36.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--faults", default="",
+                    help="comma list wid:t, e.g. 7:12,6:24")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    prof = profiler.build_profile(cfg)
+    if args.policy == "clipper":
+        idx = args.clipper_idx if args.clipper_idx >= 0 else prof.n_pareto - 1
+        pol = policies.ClipperFixed(idx)
+    else:
+        pol = policies.ALL_POLICIES[args.policy]()
+
+    if args.trace == "bursty":
+        arr = traces.bursty_trace(args.rate * 0.2, args.rate * 0.8, args.cv2,
+                                  args.duration, args.seed)
+    elif args.trace == "time_varying":
+        arr = traces.time_varying_trace(args.rate * 0.4, args.rate, args.tau,
+                                        args.cv2, args.duration, args.seed)
+    else:
+        arr = traces.maf_like_trace(args.rate, args.duration, seed=args.seed)
+
+    faults = {}
+    if args.faults:
+        for part in args.faults.split(","):
+            wid, t = part.split(":")
+            faults[int(wid)] = float(t)
+    scfg = simulator.SimConfig(n_workers=args.workers, slo=args.slo_ms / 1e3,
+                               fault_times=faults, seed=args.seed)
+    res = simulator.simulate(arr, prof, pol, scfg)
+    out = {"arch": args.arch, "policy": pol.name, "queries": len(arr),
+           "slo_attainment": res.slo_attainment, "mean_acc": res.mean_acc}
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns the abstract inputs of the step
+function that cell lowers (train_step for ``train_*``, prefill for
+``prefill_*``, serve_step/decode for ``decode_*``/``long_*``) — weak-
+type-correct, shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core import subnet as sn
+from repro.distributed.sharding import ShardingPlan
+from repro.models import lm
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), jnp.dtype(dtype))
+
+
+def ctrl_specs(cfg: ArchConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    ctrl = sn.make_control(cfg, sn.max_subnet(cfg))
+    return {k: sds(np.asarray(v).shape, np.asarray(v).dtype) for k, v in ctrl.items()}
+
+
+def param_specs(cfg: ArchConfig) -> Any:
+    return jax.eval_shape(lambda: lm.init_model(jax.random.PRNGKey(0), cfg))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, *, with_labels: bool) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "embed" and shape.kind != "decode":
+        out["embeds"] = sds((B, S, cfg.d_model), cfg.dtype)
+    else:
+        out["tokens"] = sds((B, S), jnp.int32)
+    if with_labels:
+        out["labels"] = sds((B, S), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec) -> Any:
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract inputs per cell kind. Keys mirror the step signatures."""
+    if shape.kind == "train":
+        return {
+            "params": param_specs(cfg),
+            "batch": batch_specs(cfg, shape, with_labels=True),
+            "ctrl": ctrl_specs(cfg),
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": param_specs(cfg),
+            "batch": batch_specs(cfg, shape, with_labels=False),
+            "ctrl": ctrl_specs(cfg),
+        }
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "params": param_specs(cfg),
+        "tokens": sds((shape.global_batch, 1), jnp.int32),
+        "ctrl": ctrl_specs(cfg),
+        "cache": cache_specs(cfg, shape),
+        "index": sds((), jnp.int32),
+    }
+
+
+def input_shardings(plan: ShardingPlan, cfg: ArchConfig, shape: ShapeSpec,
+                    specs: Dict[str, Any]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {"params": plan.params(specs["params"]),
+                           "ctrl": plan.replicated(specs["ctrl"])}
+    if "batch" in specs:
+        out["batch"] = plan.batch(specs["batch"])
+    if "tokens" in specs:
+        out["tokens"] = plan.named(plan.batch_spec("tokens", specs["tokens"].shape))
+    if "cache" in specs:
+        out["cache"] = plan.cache(specs["cache"])
+    if "index" in specs:
+        out["index"] = plan.named(jax.sharding.PartitionSpec())
+    return out
+
+
+def attention_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """Quadratic attention FLOPs (score + value matmuls), not part of
+    the 6*N*D convention but real compiled work. Causal => /2; sliding
+    window bounds the context; SSM/xLSTM layers contribute ~0."""
+    n_attn = sum(s.pattern.count("attn") * s.repeat for s in cfg.stages)
+    if cfg.shared_attn_period:
+        n_attn += sum(s.repeat for s in cfg.stages) // cfg.shared_attn_period
+    if n_attn == 0:
+        return 0.0
+    B, S = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    if shape.kind == "decode":
+        per_layer = 4.0 * B * 1 * ctx * cfg.n_heads * hd
+    else:
+        per_layer = 4.0 * B * S * (ctx / 2.0) * cfg.n_heads * hd
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return per_layer * n_attn * mult
+
+
+def analytic_flops(cfg: ArchConfig, shape: ShapeSpec, *,
+                   remat: bool = False) -> float:
+    """Lower-bound total FLOPs of the compiled step: MODEL_FLOPS (+1/3
+    recompute under remat for train) + quadratic attention. Used to
+    correct cost_analysis(), which does not scale lax.scan/while bodies
+    by their trip counts on the CPU backend."""
+    mf = model_flops(cfg, shape)
+    if shape.kind == "train" and remat:
+        mf *= 4.0 / 3.0
+    return mf + attention_flops(cfg, shape)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS for the roofline ratio: 6*N*D train (fwd+bwd),
+    2*N*D prefill, 2*N*B decode — N_active for MoE (flops_per_token
+    already counts active experts only)."""
+    f_tok = sn.flops_per_token(cfg)                 # == 2*N_active
+    if shape.kind == "train":
+        return 3.0 * f_tok * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return float(f_tok) * shape.global_batch * shape.seq_len
+    return float(f_tok) * shape.global_batch

@@ -1,0 +1,2 @@
+"""Model substrate: attention/FFN/MoE/SSM/xLSTM blocks, the
+scan-over-layers backbone, LM step functions, and the conv SuperNet."""

@@ -1,0 +1,300 @@
+"""Attention: GQA/MHA with RoPE / M-RoPE / partial-rotary, sliding
+window, SubNetAct head elasticity, flash (blockwise online-softmax)
+prefill and cached decode.
+
+The blockwise-`lax.scan` implementation here is the XLA path (and the
+oracle); `repro.kernels.ops.flash_attention` dispatches to the Pallas
+TPU kernel when running on TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core import operators as ops
+from repro.models.common import dense_init, ones_table
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim_rot: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim_rot, 2, dtype=jnp.float32) / head_dim_rot))
+
+
+def _rotate_half(x):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def apply_rope(x, positions, theta: float, rotary_pct: float = 1.0,
+               mrope_sections: Tuple[int, ...] = ()):
+    """x: (B, S, H, hd). positions: (B, S) int32, or (3, B, S) for M-RoPE.
+
+    M-RoPE (qwen2-vl): head_dim/2 frequency slots are partitioned into
+    ``mrope_sections`` (temporal, h, w); each section takes its angle
+    from the corresponding position stream.
+    """
+    hd = x.shape[-1]
+    rot = int(hd * rotary_pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    inv = rope_freqs(rot, theta)                      # (rot/2,)
+
+    if mrope_sections:
+        # positions: (3, B, S); build per-frequency angle source.
+        sec = jnp.concatenate([jnp.full((s,), i, jnp.int32) for i, s in enumerate(mrope_sections)])
+        sec = sec[: rot // 2]
+        pos = jnp.take(positions, sec, axis=0)        # (rot/2, B, S) gathered per freq
+        ang = jnp.einsum("fbs,f->bsf", pos.astype(jnp.float32), inv)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * inv   # (B, S, rot/2)
+    ang = jnp.concatenate([ang, ang], axis=-1)[:, :, None, :]  # (B,S,1,rot)
+    x_rot = x_rot * jnp.cos(ang).astype(x.dtype) + _rotate_half(x_rot) * jnp.sin(ang).astype(x.dtype)
+    return jnp.concatenate([x_rot, x_pass], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Blockwise flash attention (XLA path / oracle)
+# --------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset=0, kv_len=None, q_block: int = 512,
+                    kv_block: int = 512, scale: Optional[float] = None):
+    """Online-softmax blockwise attention.
+
+    q: (B, Hq, Sq, hd); k/v: (B, Hkv, Sk, hd) with Hq % Hkv == 0.
+    ``q_offset``: absolute position of q[0] (decode/chunked prefill).
+    ``kv_len``: traced valid KV length (cache); None = all of Sk.
+    ``window``: sliding-window size (0 = full).
+    Memory: O(Sq_block * Sk_block); compute masked full-causal (the
+    perf pass can switch to block-skipping).
+    """
+    B, Hq, Sq, hd = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Sk)
+    n_q, n_k = -(-Sq // qb), -(-Sk // kb)
+    pad_q, pad_k = n_q * qb - Sq, n_k * kb - Sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    qr = q.reshape(B, Hkv, G, n_q, qb, hd).astype(jnp.float32)
+    kr = k.reshape(B, Hkv, n_k, kb, hd).astype(jnp.float32)
+    vr = v.reshape(B, Hkv, n_k, kb, hd).astype(jnp.float32)
+
+    q_pos = q_offset + lax.iota(jnp.int32, n_q * qb).reshape(n_q, qb)
+    k_pos = lax.iota(jnp.int32, n_k * kb).reshape(n_k, kb)
+    valid_k = jnp.asarray(Sk if kv_len is None else kv_len, jnp.int32)
+
+    def q_step(_, qi):
+        qblk, qp = qi                                  # (B,Hkv,G,qb,hd), (qb,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kp = ki
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk) * scale
+            mask = kp[None, :] < valid_k
+            if causal:
+                mask &= kp[None, :] <= qp[:, None]
+            if window:
+                mask &= kp[None, :] > qp[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vblk)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qb, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kr, 2, 0), jnp.moveaxis(vr, 2, 0), k_pos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, out = lax.scan(q_step, None, (jnp.moveaxis(qr, 3, 0), q_pos))
+    out = jnp.moveaxis(out, 0, 3).reshape(B, Hq, n_q * qb, hd)
+    return out[:, :, :Sq].astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, index, window: int = 0):
+    """Single-step attention over a cache.
+
+    q: (B, Hq, 1, hd); caches: (B, Hkv, Smax, hd); ``index`` = traced
+    absolute position of the new token. Rolling caches (window > 0)
+    store positions modulo Smax.
+    """
+    B, Hq, _, hd = q.shape
+    _, Hkv, Smax, _ = k_cache.shape
+    G = Hq // Hkv
+    qf = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, k_cache.astype(jnp.float32)) * hd ** -0.5
+    pos = lax.iota(jnp.int32, Smax)
+    if window:
+        slot_age = (index - pos) % Smax                # rolling buffer age
+        mask = (slot_age < jnp.minimum(window, index + 1))
+    else:
+        mask = pos <= index
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, 1, hd).astype(v_cache.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention block (params + forward), SubNetAct-elastic
+# --------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig, dtype) -> Dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], (d, Hq * hd), dtype),
+        "wk": dense_init(ks[1], (d, Hkv * hd), dtype),
+        "wv": dense_init(ks[2], (d, Hkv * hd), dtype),
+        "wo": dense_init(ks[3], (Hq * hd, d), dtype),
+        "norm_gamma": ones_table(cfg.elastic.num_subnets, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    if cfg.norm == "layernorm":
+        p["norm_beta"] = jnp.zeros((cfg.elastic.num_subnets, d), jnp.float32)
+    return p
+
+
+def _project_qkv(p, cfg: ArchConfig, x, positions):
+    hd = cfg.resolved_head_dim
+    B, S, _ = x.shape
+    q = x @ p["wq"] + (p.get("bq", 0))
+    k = x @ p["wk"] + (p.get("bk", 0))
+    v = x @ p["wv"] + (p.get("bv", 0))
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_pct, cfg.mrope_sections)
+    return q, k, v
+
+
+def head_mask(cfg: ArchConfig, o, head_width):
+    """Zero the outputs of inactive query heads. o: (..., Hq, hd).
+
+    GQA: active heads are a per-KV-group prefix (cache layout stays
+    identical across subnets); MHA: a global prefix."""
+    from repro.core.subnet import head_group_size
+    Hq = cfg.n_heads
+    group = head_group_size(cfg)
+    if group > 1:
+        kv = Hq // group
+        per_group = head_width // kv
+        m = (lax.iota(jnp.int32, Hq) % group) < per_group
+    else:
+        m = lax.iota(jnp.int32, Hq) < head_width
+    shape = [1] * o.ndim
+    shape[-2] = Hq
+    return o * m.reshape(shape).astype(o.dtype)
+
+
+def attention_block(p, cfg: ArchConfig, x, ctrl, positions, *,
+                    slice_mode: str = "mask", attn_impl=flash_attention):
+    """Full-sequence attention with pre-norm. x: (B,S,d) -> (B,S,d)."""
+    h = ops.subnet_norm(x, p["norm_gamma"], ctrl["subnet_id"],
+                        beta_table=p.get("norm_beta"), eps=cfg.norm_eps, kind=cfg.norm)
+    q, k, v = _project_qkv(p, cfg, h, positions)
+    B, S, Hq, hd = q.shape
+    from repro.core.subnet import head_group_size
+    group = head_group_size(cfg)
+    kv = Hq // group
+
+    if slice_mode == "switch" and len(cfg.elastic.head_fracs) > 1:
+        from repro.core.subnet import width_options
+        opts = width_options(cfg)["heads"]
+
+        def branch(kh: int):
+            if group > 1:
+                # per-KV-group prefix: every KV head keeps serving
+                a = kh // kv
+                qs = q.reshape(B, S, kv, group, hd)[:, :, :, :a]
+                qs = qs.reshape(B, S, kv * a, hd)
+                o = attn_impl(qs.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3), causal=True,
+                              window=cfg.sliding_window)
+                o = o.transpose(0, 2, 1, 3).reshape(B, S, kv * a * hd)
+                wo = p["wo"].reshape(kv, group, hd, cfg.d_model)[:, :a]
+                return o @ wo.reshape(kv * a * hd, cfg.d_model)
+            # MHA: q and k/v prefixes drop together
+            o = attn_impl(q[:, :, :kh].transpose(0, 2, 1, 3),
+                          k[:, :, :kh].transpose(0, 2, 1, 3),
+                          v[:, :, :kh].transpose(0, 2, 1, 3),
+                          causal=True, window=cfg.sliding_window)
+            o = o.transpose(0, 2, 1, 3).reshape(B, S, kh * hd)
+            return o @ lax.slice(p["wo"], (0, 0), (kh * hd, cfg.d_model))
+
+        y = ops.switch_over_widths(ctrl["head_bucket"], opts, branch)
+    else:
+        o = attn_impl(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                      v.transpose(0, 2, 1, 3), causal=True,
+                      window=cfg.sliding_window)
+        o = o.transpose(0, 2, 1, 3)                   # (B,S,H,hd)
+        # WeightSlice(mask): zero the *outputs* of inactive heads —
+        # paper-faithful routing (inactive channels contribute nothing).
+        o = head_mask(cfg, o, ctrl["head_width"])
+        y = o.reshape(B, S, Hq * hd) @ p["wo"]
+    return x + y.astype(x.dtype)
+
+
+def attention_decode(p, cfg: ArchConfig, x, ctrl, cache, index, *,
+                     slice_mode: str = "mask"):
+    """One-token decode. x: (B,1,d); cache: {'k','v'}: (B,Hkv,Smax,hd)."""
+    h = ops.subnet_norm(x, p["norm_gamma"], ctrl["subnet_id"],
+                        beta_table=p.get("norm_beta"), eps=cfg.norm_eps, kind=cfg.norm)
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    pos_shape = (3, B, 1) if cfg.mrope_sections else (B, 1)
+    positions = jnp.broadcast_to(jnp.asarray(index, jnp.int32), pos_shape)
+    q, k, v = _project_qkv(p, cfg, h, positions)
+    Smax = cache["k"].shape[2]
+    slot = index % Smax if cfg.sliding_window else index
+    k_cache = lax.dynamic_update_slice(cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
+                                       (0, 0, slot, 0))
+    v_cache = lax.dynamic_update_slice(cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
+                                       (0, 0, slot, 0))
+    o = decode_attention(q.transpose(0, 2, 1, 3), k_cache, v_cache,
+                         index=index, window=cfg.sliding_window)
+    o = o.transpose(0, 2, 1, 3)                        # (B,1,H,hd)
+    o = head_mask(cfg, o, ctrl["head_width"])
+    y = o.reshape(B, 1, cfg.n_heads * hd) @ p["wo"]
+    return x + y.astype(x.dtype), {"k": k_cache, "v": v_cache}
+
+
+def init_attention_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype) -> Dict:
+    Smax = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    shape = (batch, cfg.n_kv_heads, Smax, cfg.resolved_head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

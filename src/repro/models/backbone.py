@@ -1,0 +1,264 @@
+"""Backbone engine: scan-over-layers execution of Stage patterns with
+SubNetAct LayerSelect gating, per-kind caches for decode, zamba2-style
+shared attention, and optional remat.
+
+Parameters for each stage are stacked along a leading ``repeat`` axis
+(compile time O(1) in depth). The device-side control tuple (``ctrl``)
+is pure data — actuating a different subnet never recompiles.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, Stage
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import stack_init
+
+# kind -> (init, full_fn(p,cfg,x,ctrl,pos,...), decode_fn(p,cfg,x,ctrl,cache,idx),
+#          cache_init(cfg,batch,seq,dtype) | None)
+_REG: Dict[str, Tuple] = {}
+
+
+def _register(kind, init, full, decode, cache_init):
+    _REG[kind] = (init, full, decode, cache_init)
+
+
+_register(
+    "attn", attn_mod.init_attention,
+    lambda p, cfg, x, ctrl, pos, sm: attn_mod.attention_block(p, cfg, x, ctrl, pos, slice_mode=sm),
+    lambda p, cfg, x, ctrl, cache, idx, sm: attn_mod.attention_decode(p, cfg, x, ctrl, cache, idx, slice_mode=sm),
+    lambda cfg, b, s, dt: attn_mod.init_attention_cache(cfg, b, s, dt),
+)
+_register(
+    "mlp", ffn_mod.init_mlp,
+    lambda p, cfg, x, ctrl, pos, sm: ffn_mod.mlp_block(p, cfg, x, ctrl, slice_mode=sm),
+    lambda p, cfg, x, ctrl, cache, idx, sm: (ffn_mod.mlp_block(p, cfg, x, ctrl, slice_mode=sm), cache),
+    None,
+)
+_register(
+    "moe", moe_mod.init_moe,
+    lambda p, cfg, x, ctrl, pos, sm, ng=1, ga=None: moe_mod.moe_block(p, cfg, x, ctrl, slice_mode=sm, n_groups=ng, group_axes=ga),
+    lambda p, cfg, x, ctrl, cache, idx, sm: (moe_mod.moe_block(p, cfg, x, ctrl, slice_mode=sm), cache),
+    None,
+)
+_register(
+    "mamba", ssm_mod.init_mamba,
+    lambda p, cfg, x, ctrl, pos, sm: ssm_mod.mamba_block(p, cfg, x, ctrl, slice_mode=sm),
+    lambda p, cfg, x, ctrl, cache, idx, sm: ssm_mod.mamba_decode(p, cfg, x, ctrl, cache, idx),
+    lambda cfg, b, s, dt: ssm_mod.init_mamba_cache(cfg, b, dt),
+)
+_register(
+    "mlstm", xlstm_mod.init_mlstm,
+    lambda p, cfg, x, ctrl, pos, sm: xlstm_mod.mlstm_block(p, cfg, x, ctrl, slice_mode=sm),
+    lambda p, cfg, x, ctrl, cache, idx, sm: xlstm_mod.mlstm_decode(p, cfg, x, ctrl, cache, idx),
+    lambda cfg, b, s, dt: xlstm_mod.init_mlstm_cache(cfg, b, dt),
+)
+_register(
+    "slstm", xlstm_mod.init_slstm,
+    lambda p, cfg, x, ctrl, pos, sm: xlstm_mod.slstm_block(p, cfg, x, ctrl, slice_mode=sm),
+    lambda p, cfg, x, ctrl, cache, idx, sm: xlstm_mod.slstm_decode(p, cfg, x, ctrl, cache, idx),
+    lambda cfg, b, s, dt: xlstm_mod.init_slstm_cache(cfg, b, dt),
+)
+
+
+def _slot(j: int, kind: str) -> str:
+    return f"{j}:{kind}"
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def init_backbone(key, cfg: ArchConfig, dtype) -> Dict:
+    params: Dict[str, Any] = {"stages": []}
+    keys = jax.random.split(key, len(cfg.stages) + 1)
+    for si, stage in enumerate(cfg.stages):
+        sp = {}
+        skeys = jax.random.split(keys[si], len(stage.pattern))
+        for j, kind in enumerate(stage.pattern):
+            init = _REG[kind][0]
+            sp[_slot(j, kind)] = stack_init(lambda k, kd=kind: _REG[kd][0](k, cfg, dtype),
+                                            skeys[j], stage.repeat)
+        params["stages"].append(sp)
+    if cfg.shared_attn_period:
+        k1, k2 = jax.random.split(keys[-1])
+        # zamba2-style shared transformer block (attention + MLP), the
+        # same weights re-applied every `shared_attn_period` units.
+        params["shared_attn"] = attn_mod.init_attention(k1, cfg, dtype)
+        if cfg.d_ff:
+            params["shared_mlp"] = ffn_mod.init_mlp(k2, cfg, dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def backbone_forward(params, cfg: ArchConfig, x, ctrl, positions, *,
+                     slice_mode: str = "mask", remat: bool = False,
+                     moe_groups: int = 1, moe_group_axes=None):
+    """x: (B, S, d) -> (B, S, d)."""
+    gates_all = ctrl["layer_gate"]
+    offset = 0
+    for si, stage in enumerate(cfg.stages):
+        sp = params["stages"][si]
+        gates = lax.dynamic_slice_in_dim(gates_all, offset, stage.repeat)
+        offset += stage.repeat
+
+        def unit(x, unit_p, gate, r_idx, stage=stage, si=si):
+            def body(xx):
+                for j, kind in enumerate(stage.pattern):
+                    fn = _REG[kind][1]
+                    if kind == "moe":
+                        xx = fn(unit_p[_slot(j, kind)], cfg, xx, ctrl, positions,
+                                slice_mode, moe_groups, moe_group_axes)
+                    else:
+                        xx = fn(unit_p[_slot(j, kind)], cfg, xx, ctrl, positions,
+                                slice_mode)
+                return xx
+
+            # LayerSelect: one executable serves every depth.
+            x = lax.cond(gate, body, lambda xx: xx, x)
+            if cfg.shared_attn_period and "shared_attn" in params:
+                use = jnp.logical_and(
+                    gate, (r_idx % cfg.shared_attn_period) == cfg.shared_attn_period - 1)
+                def shared_block(xx):
+                    xx = attn_mod.attention_block(
+                        params["shared_attn"], cfg, xx, ctrl, positions,
+                        slice_mode=slice_mode)
+                    if "shared_mlp" in params:
+                        xx = ffn_mod.mlp_block(params["shared_mlp"], cfg, xx,
+                                               ctrl, slice_mode=slice_mode)
+                    return xx
+
+                x = lax.cond(use, shared_block, lambda xx: xx, x)
+            return x
+
+        if remat:
+            unit = jax.checkpoint(unit, static_argnums=())
+
+        def scan_body(x, inp):
+            unit_p, gate, r_idx = inp
+            return unit(x, unit_p, gate, r_idx), None
+
+        x, _ = lax.scan(scan_body, x, (sp, gates, jnp.arange(stage.repeat)))
+    return x
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype) -> Dict:
+    """Nested cache pytree. Leading dim of each stage-leaf = repeat."""
+    cache: Dict[str, Any] = {"stages": []}
+    for stage in cfg.stages:
+        sc = {}
+        for j, kind in enumerate(stage.pattern):
+            ci = _REG[kind][3]
+            if ci is None:
+                continue
+            one = ci(cfg, batch, seq_len, dtype)
+            sc[_slot(j, kind)] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (stage.repeat,) + a.shape).copy(), one)
+        cache["stages"].append(sc)
+    if cfg.shared_attn_period:
+        n_inv = sum(s.repeat for s in cfg.stages) // cfg.shared_attn_period
+        n_inv = max(n_inv, 1)
+        one = attn_mod.init_attention_cache(cfg, batch, seq_len, dtype)
+        cache["shared_attn"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_inv,) + a.shape).copy(), one)
+    return cache
+
+
+# --------------------------------------------------------------------------
+# decode step
+# --------------------------------------------------------------------------
+
+
+def backbone_decode(params, cfg: ArchConfig, x, ctrl, cache, index, *,
+                    slice_mode: str = "mask", cache_constraints=None):
+    """One-token decode. x: (B, 1, d) -> ((B, 1, d), new_cache).
+
+    ``cache_constraints``: optional per-stage tree of NamedShardings
+    (per-layer leaf shapes) applied to each updated cache slice inside
+    the scan — without it the SPMD partitioner may choose a bad layout
+    for the scan's cache accumulator (measured: a sequence- or
+    head_dim-sharded KV cache silently re-materializes replicated,
+    +100 GB/device on llama4 decode_32k).
+    """
+    gates_all = ctrl["layer_gate"]
+    offset = 0
+    new_cache: Dict[str, Any] = {"stages": [], "shared_attn": cache.get("shared_attn")}
+    shared_state = (cache.get("shared_attn"), jnp.int32(0))
+
+    for si, stage in enumerate(cfg.stages):
+        sp = params["stages"][si]
+        sc = cache["stages"][si]
+        gates = lax.dynamic_slice_in_dim(gates_all, offset, stage.repeat)
+        offset += stage.repeat
+        constraint = cache_constraints[si] if cache_constraints else None
+
+        def scan_body(carry, inp, stage=stage, constraint=constraint):
+            x, shared_cache, inv_counter = carry
+            unit_p, unit_c, gate, r_idx = inp
+
+            def body(op):
+                xx, uc = op
+                uc = dict(uc)
+                for j, kind in enumerate(stage.pattern):
+                    slot = _slot(j, kind)
+                    dec = _REG[kind][2]
+                    xx, upd = dec(unit_p[slot], cfg, xx, ctrl,
+                                  uc.get(slot), index, slice_mode)
+                    if slot in uc:
+                        uc[slot] = upd
+                return xx, uc
+
+            x, unit_c = lax.cond(gate, body, lambda op: op, (x, unit_c))
+            if constraint is not None:
+                unit_c = jax.tree.map(lax.with_sharding_constraint,
+                                      unit_c, constraint)
+
+            if cfg.shared_attn_period and shared_cache is not None:
+                use = jnp.logical_and(
+                    gate, (r_idx % cfg.shared_attn_period) == cfg.shared_attn_period - 1)
+
+                def do_shared(op):
+                    xx, shc, cnt = op
+                    ci = jax.tree.map(lambda c: lax.dynamic_index_in_dim(c, cnt, 0, keepdims=False), shc)
+                    xx, cn = attn_mod.attention_decode(
+                        params["shared_attn"], cfg, xx, ctrl, ci, index,
+                        slice_mode=slice_mode)
+                    shc = jax.tree.map(
+                        lambda c, n: lax.dynamic_update_index_in_dim(c, n, cnt, 0), shc, cn)
+                    if "shared_mlp" in params:
+                        xx = ffn_mod.mlp_block(params["shared_mlp"], cfg, xx,
+                                               ctrl, slice_mode=slice_mode)
+                    return xx, shc, cnt + 1
+
+                x, shared_cache, inv_counter = lax.cond(
+                    use, do_shared, lambda op: op, (x, shared_cache, inv_counter))
+            return (x, shared_cache, inv_counter), unit_c
+
+        (x, shared_cache, counter), updated = lax.scan(
+            scan_body, (x,) + shared_state, (sp, sc, gates, jnp.arange(stage.repeat)))
+        shared_state = (shared_cache, counter)
+        new_cache["stages"].append(updated)
+
+    new_cache["shared_attn"] = shared_state[0]
+    if new_cache["shared_attn"] is None:
+        new_cache.pop("shared_attn")
+    return x, new_cache

@@ -1,0 +1,50 @@
+"""Shared model utilities: initialization, dtype policy, param trees."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    """Truncated-normal fan-in init (LM standard)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    std = scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_table(n_subnets: int, d: int, dtype=jnp.float32):
+    """SubnetNorm gain table, initialized shared (gamma == 1 for every
+    subnet); calibration/training specializes rows."""
+    return jnp.ones((n_subnets, d), dtype)
+
+
+def param_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_count(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def split_keys(key, n: int):
+    return jax.random.split(key, n)
+
+
+def stack_init(init_fn, key, repeat: int):
+    """Initialize ``repeat`` copies of a sub-block and stack every leaf
+    along a new leading axis (scan-over-layers layout)."""
+    keys = jax.random.split(key, repeat)
+    return jax.vmap(init_fn)(keys)

@@ -1,0 +1,177 @@
+"""OFA-ResNet SuperNet (the paper's own serving architecture) with
+SubNetAct operators, including *true BatchNorm* SubnetNorm: per-subnet
+(mu, sigma) tables calibrated offline (core/calibrate.py), exactly the
+paper's §3 bookkeeping.
+
+Residual bottleneck units; elastic dims:
+  D (depth)         — LayerSelect gates the last units of each stage,
+  E (expand ratio)  — WeightSlice on the bottleneck mid channels,
+  W (width mult)    — WeightSlice on the stage output channels.
+
+NHWC layout; mask-mode WeightSlice (paper-faithful routing semantics).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core import operators as ops
+from repro.core.subnet import SubnetDescriptor, stage_gates
+from repro.models.common import dense_init
+
+import numpy as np
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    std = (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, (kh, kw, cin, cout), dtype) * std
+
+
+def _conv(x, w, stride: int = 1):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn_tables(n_subnets: int, c: int) -> Dict:
+    """Per-subnet BatchNorm statistics + shared affine params."""
+    return {
+        "mean": jnp.zeros((n_subnets, c), jnp.float32),
+        "var": jnp.ones((n_subnets, c), jnp.float32),
+        "gamma": jnp.ones((c,), jnp.float32),
+        "beta": jnp.zeros((c,), jnp.float32),
+    }
+
+
+def _bn(x, t, subnet_id, eps=1e-5):
+    return ops.subnet_batch_norm(x, t["mean"], t["var"], t["gamma"], t["beta"],
+                                 subnet_id, eps=eps)
+
+
+def _bn_batch(x, t, stats: Dict, site: str, eps=1e-5):
+    """Training-mode BN: normalize with *batch* statistics and record
+    them (SubnetNorm calibration, paper §3). x: (B, H, W, C)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=(0, 1, 2))
+    var = xf.var(axis=(0, 1, 2))
+    stats[site] = (mu, var)
+    y = (xf - mu) * lax.rsqrt(var + eps) * t["gamma"] + t["beta"]
+    return y.astype(x.dtype)
+
+
+def init_convnet(key, cfg: ArchConfig) -> Dict:
+    ns = cfg.elastic.num_subnets
+    widths = cfg.conv_stage_widths
+    keys = jax.random.split(key, 2 + sum(s.repeat for s in cfg.stages))
+    stem_w = max(64, widths[0] // 4)
+    params: Dict = {
+        "stem": {"w": _conv_init(keys[0], 3, 3, 3, stem_w), "bn": _bn_tables(ns, stem_w)},
+        "stages": [],
+    }
+    ki = 1
+    cin = stem_w
+    for si, stage in enumerate(cfg.stages):
+        cout = widths[si]
+        mid = cout // 4
+        units = []
+        for r in range(stage.repeat):
+            ks = jax.random.split(keys[ki], 4)
+            ki += 1
+            u = {
+                "w1": _conv_init(ks[0], 1, 1, cin if r == 0 else cout, mid),
+                "bn1": _bn_tables(ns, mid),
+                "w2": _conv_init(ks[1], 3, 3, mid, mid),
+                "bn2": _bn_tables(ns, mid),
+                "w3": _conv_init(ks[2], 1, 1, mid, cout),
+                "bn3": _bn_tables(ns, cout),
+            }
+            if r == 0:
+                u["proj"] = _conv_init(ks[3], 1, 1, cin, cout)
+                u["bn_proj"] = _bn_tables(ns, cout)
+            units.append(u)
+        params["stages"].append(units)
+        cin = cout
+    params["head"] = dense_init(keys[-1], (widths[-1], cfg.n_classes), jnp.float32)
+    return params
+
+
+def convnet_forward(params, cfg: ArchConfig, images, ctrl, *,
+                    collect_stats: bool = False, static_gates=None):
+    """images: (B, H, W, 3) -> logits (B, n_classes).
+
+    ``collect_stats=True`` is the SubnetNorm calibration path: BN uses
+    batch statistics and returns them per site. Depth gating is then
+    resolved in Python (``static_gates``) — calibration runs offline,
+    per subnet, so recompilation is off the critical path (paper §5,
+    Supernet Profiler).
+    """
+    sid = ctrl["subnet_id"]
+    gates = static_gates if collect_stats else ctrl["layer_gate"]
+    # E / W control: fraction of mid / out channels active.
+    e_frac = ctrl["conv_e_frac"]
+    w_frac = ctrl["conv_w_frac"]
+    stats: Dict = {}
+
+    def bn(x, t, site):
+        if collect_stats:
+            return _bn_batch(x, t, stats, site)
+        return _bn(x, t, sid)
+
+    x = jax.nn.relu(bn(_conv(images, params["stem"]["w"], 2), params["stem"]["bn"], "stem"))
+    gi = 0
+    for si, stage in enumerate(cfg.stages):
+        cout = cfg.conv_stage_widths[si]
+        mid = cout // 4
+        active_mid = jnp.maximum(8, (e_frac * mid).astype(jnp.int32))
+        # W applies to intermediate stages only (final width feeds the head).
+        if si < len(cfg.stages) - 1:
+            active_out = jnp.maximum(8, (w_frac * cout).astype(jnp.int32))
+        else:
+            active_out = jnp.int32(cout)
+        for r, u in enumerate(params["stages"][si]):
+            gate = gates[gi]
+            gi += 1
+            stride = 2 if r == 0 else 1
+
+            def body(xx, u=u, stride=stride, active_mid=active_mid,
+                     active_out=active_out, si=si, r=r):
+                pre = f"s{si}u{r}."
+                h = jax.nn.relu(bn(_conv(xx, u["w1"], stride), u["bn1"], pre + "bn1"))
+                h = ops.slice_mask(h, active_mid)            # WeightSlice(E)
+                h = jax.nn.relu(bn(_conv(h, u["w2"]), u["bn2"], pre + "bn2"))
+                h = ops.slice_mask(h, active_mid)
+                h = bn(_conv(h, u["w3"]), u["bn3"], pre + "bn3")
+                if "proj" in u:
+                    res = bn(_conv(xx, u["proj"], stride), u["bn_proj"], pre + "bn_proj")
+                else:
+                    res = xx
+                y = jax.nn.relu(res + h)
+                return ops.slice_mask(y, active_out)         # WeightSlice(W)
+
+            if r == 0:
+                x = body(x)                                  # stage entry always runs
+            elif collect_stats:
+                if bool(gate):
+                    x = body(x)
+            else:
+                x = lax.cond(gate, body, lambda xx: xx, x)   # LayerSelect(D)
+    x = x.mean(axis=(1, 2))                                  # global average pool
+    logits = x @ params["head"]
+    if collect_stats:
+        return logits, stats
+    return logits
+
+
+def make_conv_control(cfg: ArchConfig, sub: SubnetDescriptor) -> Dict[str, np.ndarray]:
+    """Conv control tuple: (D, E, W) exactly as the paper's §3 inputs."""
+    return {
+        "layer_gate": stage_gates(cfg, sub.depth_frac),
+        "conv_e_frac": np.float32(sub.ffn_frac),
+        "conv_w_frac": np.float32(sub.head_frac),
+        "subnet_id": np.int32(sub.subnet_id),
+    }

@@ -1,0 +1,58 @@
+"""Dense FFN (SwiGLU) with SubNetAct width elasticity (WeightSlice)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core import operators as ops
+from repro.models.common import dense_init, ones_table
+
+
+def init_mlp(key, cfg: ArchConfig, dtype) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "wu": dense_init(ks[1], (d, f), dtype),
+        "wd": dense_init(ks[2], (f, d), dtype),
+        "norm_gamma": ones_table(cfg.elastic.num_subnets, d),
+    }
+    if cfg.ffn_act == "swiglu":
+        p["wg"] = dense_init(ks[0], (d, f), dtype)
+    if cfg.norm == "layernorm":
+        p["norm_beta"] = jnp.zeros((cfg.elastic.num_subnets, d), jnp.float32)
+    return p
+
+
+def mlp_block(p, cfg: ArchConfig, x, ctrl, *, slice_mode: str = "mask"):
+    """Pre-norm SwiGLU/GELU FFN with elastic d_ff. x: (..., d) -> (..., d)."""
+    h = ops.subnet_norm(x, p["norm_gamma"], ctrl["subnet_id"],
+                        beta_table=p.get("norm_beta"), eps=cfg.norm_eps, kind=cfg.norm)
+
+    def act(hh, wg, wu):
+        if cfg.ffn_act == "swiglu":
+            return jax.nn.silu(hh @ wg) * (hh @ wu)
+        return jax.nn.gelu(hh @ wu)
+
+    if slice_mode == "switch" and len(cfg.elastic.ffn_fracs) > 1:
+        from repro.core.subnet import width_options
+        opts = width_options(cfg)["ffn"]
+
+        def branch(kf: int):
+            wg = (lax.slice(p["wg"], (0, 0), (cfg.d_model, kf))
+                  if "wg" in p else None)
+            wu = lax.slice(p["wu"], (0, 0), (cfg.d_model, kf))
+            wd = lax.slice(p["wd"], (0, 0), (kf, cfg.d_model))
+            return act(h, wg, wu) @ wd
+
+        y = ops.switch_over_widths(ctrl["ffn_bucket"], opts, branch)
+    else:
+        a = act(h, p.get("wg"), p["wu"])
+        # WeightSlice(mask): zeroing hidden channels beyond the active
+        # width makes the down-proj rows for those channels inert.
+        a = ops.slice_mask(a, ctrl["ffn_width"])
+        y = a @ p["wd"]
+    return x + y.astype(x.dtype)

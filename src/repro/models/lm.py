@@ -1,0 +1,149 @@
+"""LM wrapper: embeddings, final norm, head, loss, and the three step
+functions (train / prefill / decode) that the launcher, dry-run, tests
+and serving runtime all share.
+
+``frontend='embed'`` archs (qwen2-vl, musicgen) take precomputed
+patch/frame embeddings for train/prefill — the modality frontend is a
+stub per the assignment; decode always consumes token ids.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core import operators as ops
+from repro.models import backbone as bb
+from repro.models.common import dense_init, ones_table
+
+
+def init_model(key, cfg: ArchConfig, dtype=None) -> Dict:
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    k_emb, k_bb, k_head = jax.random.split(key, 3)
+    params = {
+        "embed": dense_init(k_emb, (cfg.vocab_size, cfg.d_model), dtype, scale=1.0),
+        "backbone": bb.init_backbone(k_bb, cfg, dtype),
+        "final_gamma": ones_table(cfg.elastic.num_subnets, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+def _head(params, cfg: ArchConfig, x, ctrl):
+    h = ops.subnet_norm(x, params["final_gamma"], ctrl["subnet_id"],
+                        eps=cfg.norm_eps, kind=cfg.norm)
+    w = params.get("head")
+    if w is None:
+        w = params["embed"].T
+    return h @ w
+
+
+def default_positions(cfg: ArchConfig, batch: int, seq: int):
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos, (3, batch, seq))
+    return pos
+
+
+def embed_inputs(params, cfg: ArchConfig, batch: Dict[str, Any]):
+    """tokens (B,S) int32 or embeds (B,S,d)."""
+    if cfg.frontend == "embed" and "embeds" in batch:
+        return batch["embeds"].astype(params["embed"].dtype)
+    return jnp.take(params["embed"], batch["tokens"], axis=0)
+
+
+def sinusoid_pos(positions, d: int, dtype):
+    """Classic sinusoidal absolute embedding (musicgen). positions (B,S)."""
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq        # (B,S,half)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# step functions
+# --------------------------------------------------------------------------
+
+
+def forward(params, cfg: ArchConfig, batch, ctrl, *, slice_mode="mask",
+            remat=False, moe_groups=1, moe_group_axes=None):
+    x = embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    if cfg.pos_embed == "sinusoidal":
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        x = x + sinusoid_pos(pos2d, cfg.d_model, x.dtype)
+    x = bb.backbone_forward(params["backbone"], cfg, x, ctrl, positions,
+                            slice_mode=slice_mode, remat=remat,
+                            moe_groups=moe_groups, moe_group_axes=moe_group_axes)
+    return _head(params, cfg, x, ctrl)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, ctrl, *, slice_mode="mask",
+            remat=False, moe_groups=1, moe_group_axes=None, z_loss: float = 1e-4):
+    logits = forward(params, cfg, batch, ctrl, slice_mode=slice_mode,
+                     remat=remat, moe_groups=moe_groups,
+                     moe_group_axes=moe_group_axes).astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    if z_loss:
+        loss = loss + z_loss * ((lse * mask) ** 2).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss
+
+
+def prefill(params, cfg: ArchConfig, batch, ctrl, *, slice_mode="mask",
+            moe_groups=1, moe_group_axes=None):
+    """Serving prefill: logits for the final position only."""
+    logits = forward(params, cfg, batch, ctrl, slice_mode=slice_mode,
+                     moe_groups=moe_groups, moe_group_axes=moe_group_axes)
+    return logits[:, -1:, :]
+
+
+def decode_step(params, cfg: ArchConfig, tokens, ctrl, cache, index, *,
+                slice_mode="mask", cache_constraints=None):
+    """tokens: (B,1) int32; returns (logits (B,1,V), new_cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.pos_embed == "sinusoidal":
+        pos = jnp.broadcast_to(jnp.asarray(index, jnp.int32), tokens.shape)
+        x = x + sinusoid_pos(pos, cfg.d_model, x.dtype)
+    x, cache = bb.backbone_decode(params["backbone"], cfg, x, ctrl, cache, index,
+                                  slice_mode=slice_mode,
+                                  cache_constraints=cache_constraints)
+    return _head(params, cfg, x, ctrl), cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype=None):
+    return bb.init_cache(cfg, batch, seq_len, jnp.dtype(dtype or cfg.dtype))
+
+
+# --------------------------------------------------------------------------
+# tiny generate loop (examples / integration tests only)
+# --------------------------------------------------------------------------
+
+
+def generate(params, cfg: ArchConfig, prompt, ctrl, max_new: int, seq_cap: int = 256):
+    """Greedy decode; prompt teacher-forced through the decode path so it
+    works uniformly across attention/SSM/xLSTM families."""
+    B, P = prompt.shape
+    cache = init_cache(cfg, B, seq_cap)
+    step = jax.jit(lambda p, t, c, i: decode_step(p, cfg, t, ctrl, c, i))
+    tok = prompt[:, :1]
+    out = [tok]
+    for i in range(P + max_new - 1):
+        logits, cache = step(params, tok, cache, jnp.int32(i))
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        tok = prompt[:, i + 1: i + 2] if i + 1 < P else nxt
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,169 @@
+"""Mamba2 (SSD, state-space duality) block — chunked parallel prefill /
+train path and O(1)-state decode path.
+
+Single B/C group (ngroups=1), multi-head states (B, H, N, P) with
+N = ssm_state, P = ssm_head_dim. The chunked algorithm is
+O(S·Q + S·N·P) per token stream — sub-quadratic, which is what makes
+zamba2/xlstm eligible for the long_500k shape.
+
+Width elasticity is *not* applied to state dimensions (recurrence would
+be corrupted mid-stream — see DESIGN.md §Arch-applicability); depth
+elasticity (LayerSelect) applies at the block level in the backbone.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core import operators as ops
+from repro.models.common import dense_init, ones_table
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    conv_ch = d_in + 2 * cfg.ssm_state          # conv over [x, B, C]
+    return d_in, n_heads, conv_ch
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> Dict:
+    d = cfg.d_model
+    d_in, H, conv_ch = _dims(cfg)
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_in + 2 * N + H             # z, x, B, C, dt
+    p = {
+        "w_in": dense_init(ks[0], (d, proj_out), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, conv_ch), dtype, scale=1.0),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gated_norm": jnp.ones((d_in,), jnp.float32),
+        "w_out": dense_init(ks[2], (d_in, d), dtype),
+        "norm_gamma": ones_table(cfg.elastic.num_subnets, d),
+    }
+    return p
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt):
+    d_in, H, _ = _dims(cfg)
+    N = cfg.ssm_state
+    z, xc, B_, C_, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, xc, B_, C_, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b):
+    """Depthwise causal conv. xBC: (B, S, C); conv_w: (W, C)."""
+    W = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xBC.shape[1], :] * conv_w[i] for i in range(W))
+    return jax.nn.silu(out + conv_b)
+
+
+def _gated_out(p, cfg, y, z, x_res):
+    d_in, _, _ = _dims(cfg)
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    gf = gf * lax.rsqrt(jnp.mean(jnp.square(gf), -1, keepdims=True) + cfg.norm_eps)
+    g = (gf * p["gated_norm"]).astype(y.dtype)
+    return x_res + (g @ p["w_out"]).astype(x_res.dtype)
+
+
+def mamba_block(p, cfg: ArchConfig, x, ctrl, *, slice_mode: str = "mask"):
+    """Chunked SSD forward. x: (B, S, d) -> (B, S, d)."""
+    Bsz, S, d = x.shape
+    d_in, H, _ = _dims(cfg)
+    N, P = cfg.ssm_state, cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    while S % Q:
+        Q -= 1
+    nC = S // Q
+
+    h = ops.subnet_norm(x, p["norm_gamma"], ctrl["subnet_id"], eps=cfg.norm_eps,
+                        kind=cfg.norm)
+    z, xc, B_, C_, dt = _split_proj(cfg, h @ p["w_in"])
+    xBC = _causal_conv(jnp.concatenate([xc, B_, C_], -1), p["conv_w"], p["conv_b"])
+    xc, B_, C_ = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])       # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                          # (H,)
+    dA = dt * A                                                       # (B,S,H) < 0
+
+    X = xc.reshape(Bsz, S, H, P).astype(jnp.float32)
+    Bc = B_.reshape(Bsz, nC, Q, N).astype(jnp.float32)
+    Cc = C_.reshape(Bsz, nC, Q, N).astype(jnp.float32)
+    Xc = X.reshape(Bsz, nC, Q, H, P)
+    dtc = dt.reshape(Bsz, nC, Q, H)
+    g = jnp.cumsum(dA.reshape(Bsz, nC, Q, H), axis=2)                 # (B,c,Q,H)
+
+    # --- intra-chunk (quadratic within chunk only) ---
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask the exponent BEFORE exp: non-causal entries are exp of large
+    # positive values (inf) whose where-gradient would be NaN
+    diff = g[:, :, :, None, :] - g[:, :, None, :, :]                  # (B,c,Q,K,H)
+    L = jnp.exp(jnp.where(causal, diff, -1e30))
+    M = CB[..., None] * L * dtc[:, :, None, :, :]                     # (B,c,Q,K,H)
+    Y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M, Xc)
+
+    # --- chunk boundary states + inter-chunk recurrence ---
+    g_last = g[:, :, -1, :]                                           # (B,c,H)
+    decay_states = jnp.exp(g_last[:, :, None, :] - g) * dtc           # (B,c,Q,H)
+    S_c = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bc, decay_states, Xc)  # (B,c,H,N,P)
+
+    def chunk_scan(prev, inp):
+        s_c, decay = inp                                              # (B,H,N,P), (B,H)
+        new = prev * decay[:, :, None, None] + s_c
+        return new, prev
+
+    init = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    _, states_prev = lax.scan(chunk_scan, init,
+                              (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(jnp.exp(g_last), 1, 0)))
+    states_prev = jnp.moveaxis(states_prev, 0, 1)                     # (B,c,H,N,P)
+
+    Y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", Cc, states_prev, jnp.exp(g))
+    Y = (Y_intra + Y_inter + p["D"][None, None, None, :, None] * Xc)
+    Y = Y.reshape(Bsz, S, d_in).astype(x.dtype)
+    return _gated_out(p, cfg, Y, z, x)
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    d_in, H, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, H, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def mamba_decode(p, cfg: ArchConfig, x, ctrl, cache, index):
+    """One-token decode. x: (B,1,d); O(1) state update."""
+    Bsz = x.shape[0]
+    d_in, H, conv_ch = _dims(cfg)
+    N, P = cfg.ssm_state, cfg.ssm_head_dim
+    h = ops.subnet_norm(x, p["norm_gamma"], ctrl["subnet_id"], eps=cfg.norm_eps,
+                        kind=cfg.norm)
+    z, xc, B_, C_, dt = _split_proj(cfg, (h @ p["w_in"])[:, 0])       # (B, *)
+
+    xBC_new = jnp.concatenate([xc, B_, C_], -1)                       # (B, conv_ch)
+    window = jnp.concatenate([cache["conv"], xBC_new[:, None]], 1)    # (B, W, C)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"])
+    new_conv = window[:, 1:]
+    xc, B_, C_ = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])       # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                           # (B,H)
+    X = xc.reshape(Bsz, H, P).astype(jnp.float32)
+    dBx = jnp.einsum("bn,bh,bhp->bhnp", B_.astype(jnp.float32), dt, X)
+    state = cache["ssm"] * decay[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", C_.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * X
+    y = y.reshape(Bsz, 1, d_in).astype(x.dtype)
+    out = _gated_out(p, cfg, y, z[:, None], x)
+    return out, {"conv": new_conv, "ssm": state}

@@ -1,0 +1,261 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel/chunked via a
+flash-style log-space gated form) and sLSTM (scalar memory, inherently
+sequential -> lax.scan over time; O(1)-state decode).
+
+Canonical semantics (the tests' oracle) is the stabilized recurrence of
+the xLSTM paper:
+
+    m_t = max(m_{t-1} + logf_t, i_t)
+    C_t = e^{m_{t-1}+logf_t-m_t} C_{t-1} + e^{i_t-m_t} k_t v_t^T
+    n_t = e^{m_{t-1}+logf_t-m_t} n_{t-1} + e^{i_t-m_t} k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, e^{-m_t})
+
+The parallel form used for train/prefill is the exact unrolled
+equivalent: exponent e_ij = LF_i - LF_j + i_j (LF = cumsum log f),
+running row-max == m_t, computed blockwise (flash) so memory stays
+O(block^2). Recurrent *state* dims are not SubNetAct-elastic (see
+DESIGN.md §Arch-applicability); depth elasticity applies per block.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core import operators as ops
+from repro.models.common import dense_init, ones_table
+
+NEG_INF = -1e30
+
+
+def _mlstm_dims(cfg: ArchConfig):
+    d_in = int(cfg.mlstm_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    d_qk = d_in // 2
+    return d_in, H, d_qk
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ArchConfig, dtype) -> Dict:
+    d = cfg.d_model
+    d_in, H, d_qk = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * d_in), dtype),     # x_in, z
+        "wq": dense_init(ks[1], (d_in, d_qk), dtype),
+        "wk": dense_init(ks[2], (d_in, d_qk), dtype),
+        "w_if": dense_init(ks[3], (d_in, 2 * H), jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), jnp.linspace(3.0, 6.0, H)]).astype(jnp.float32),
+        "w_out": dense_init(ks[4], (d_in, d), dtype),
+        "norm_gamma": ones_table(cfg.elastic.num_subnets, d),
+        "head_norm": jnp.ones((d_in,), jnp.float32),
+    }
+
+
+def gla_flash(q, k, v, LF, b, *, q_offset=0, block: int = 256):
+    """Blockwise gated-linear-attention (the mLSTM parallel form).
+
+    q,k: (B,H,S,dqk); v: (B,H,S,dv); LF: (B,H,S) cumulative log-forget;
+    b:  (B,H,S) per-key exponent (i_j - LF_j). Returns (B,H,S,dv).
+    """
+    B, H, S, dqk = q.shape
+    dv = v.shape[-1]
+    blk = min(block, S)
+    n = -(-S // blk)
+    pad = n * blk - S
+
+    def padk(x):
+        return jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, pad)] + [(0, 0)] * (x.ndim - 3 == 0))
+
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        LF = jnp.pad(LF, ((0, 0), (0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, pad)), constant_values=NEG_INF)
+
+    qr = jnp.moveaxis(q.reshape(B, H, n, blk, dqk), 2, 0).astype(jnp.float32)
+    kr = jnp.moveaxis(k.reshape(B, H, n, blk, dqk), 2, 0).astype(jnp.float32)
+    vr = jnp.moveaxis(v.reshape(B, H, n, blk, dv), 2, 0).astype(jnp.float32)
+    LFr = jnp.moveaxis(LF.reshape(B, H, n, blk), 2, 0)
+    br = jnp.moveaxis(b.reshape(B, H, n, blk), 2, 0)
+    pos = lax.iota(jnp.int32, n * blk).reshape(n, blk)
+
+    def q_step(_, qi):
+        qblk, LFq, qp = qi
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, bk, kp = ki
+            e = LFq[..., :, None] + bk[..., None, :]             # (B,H,q,k)
+            mask = kp[None, :] <= qp[:, None]
+            e = jnp.where(mask[None, None], e, NEG_INF)
+            m_new = jnp.maximum(m, e.max(axis=-1))
+            w = jnp.exp(e - m_new[..., None])
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk) * (qblk.shape[-1] ** -0.5)
+            p = s * w
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vblk)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, blk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, blk), jnp.float32)
+        a0 = jnp.zeros((B, H, blk, dv), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (kr, vr, br, pos))
+        den = jnp.maximum(jnp.abs(l), jnp.exp(-m))
+        return None, acc / den[..., None]
+
+    _, out = lax.scan(q_step, None, (qr, LFr, pos))
+    out = jnp.moveaxis(out, 0, 2).reshape(B, H, n * blk, dv)
+    return out[:, :, :S]
+
+
+def mlstm_block(p, cfg: ArchConfig, x, ctrl, *, slice_mode: str = "mask"):
+    B, S, d = x.shape
+    d_in, H, d_qk = _mlstm_dims(cfg)
+    h = ops.subnet_norm(x, p["norm_gamma"], ctrl["subnet_id"], eps=cfg.norm_eps,
+                        kind=cfg.norm)
+    up = h @ p["w_up"]
+    x_in, z = jnp.split(up, 2, axis=-1)                       # (B,S,d_in)
+    q = (x_in @ p["wq"]).reshape(B, S, H, d_qk // H).transpose(0, 2, 1, 3)
+    k = (x_in @ p["wk"]).reshape(B, S, H, d_qk // H).transpose(0, 2, 1, 3)
+    v = x_in.reshape(B, S, H, d_in // H).transpose(0, 2, 1, 3)
+
+    gates = x_in.astype(jnp.float32) @ p["w_if"] + p["b_if"]  # (B,S,2H)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)
+    lf = jax.nn.log_sigmoid(f_raw)                            # (B,S,H)
+    LF = jnp.cumsum(lf, axis=1).transpose(0, 2, 1)            # (B,H,S)
+    b = (i_raw - jnp.cumsum(lf, axis=1)).transpose(0, 2, 1)   # i_j - LF_j
+
+    o = gla_flash(q, k, v, LF, b)                             # (B,H,S,dv)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, d_in)
+    of = o * lax.rsqrt(jnp.mean(jnp.square(o), -1, keepdims=True) + cfg.norm_eps)
+    o = (of * p["head_norm"]).astype(x.dtype)
+    y = (o * jax.nn.silu(z)) @ p["w_out"]
+    return x + y.astype(x.dtype)
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    d_in, H, d_qk = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, d_qk // H, d_in // H), jnp.float32),
+        "n": jnp.zeros((batch, H, d_qk // H), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p, cfg: ArchConfig, x, ctrl, cache, index):
+    B = x.shape[0]
+    d_in, H, d_qk = _mlstm_dims(cfg)
+    h = ops.subnet_norm(x, p["norm_gamma"], ctrl["subnet_id"], eps=cfg.norm_eps,
+                        kind=cfg.norm)
+    up = (h @ p["w_up"])[:, 0]
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q = (x_in @ p["wq"]).reshape(B, H, d_qk // H).astype(jnp.float32) * ((d_qk // H) ** -0.5)
+    k = (x_in @ p["wk"]).reshape(B, H, d_qk // H).astype(jnp.float32)
+    v = x_in.reshape(B, H, d_in // H).astype(jnp.float32)
+    gates = x_in.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)               # (B,H)
+    lf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(cache["m"] + lf, i_raw)
+    fprime = jnp.exp(cache["m"] + lf - m_new)
+    iprime = jnp.exp(i_raw - m_new)
+    C = cache["C"] * fprime[..., None, None] + iprime[..., None, None] * k[..., :, None] * v[..., None, :]
+    nvec = cache["n"] * fprime[..., None] + iprime[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, nvec)), jnp.exp(-m_new))
+    o = (num / den[..., None]).reshape(B, d_in)
+    of = o * lax.rsqrt(jnp.mean(jnp.square(o), -1, keepdims=True) + cfg.norm_eps)
+    o = (of * p["head_norm"]).astype(x.dtype)
+    y = ((o * jax.nn.silu(z))[:, None] @ p["w_out"]).astype(x.dtype)
+    return x + y, {"C": C, "n": nvec, "m": m_new}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ArchConfig, dtype) -> Dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    d_ff = int(cfg.slstm_proj_factor * d)
+    ks = jax.random.split(key, 5)
+    return {
+        "w_x": dense_init(ks[0], (d, 4 * d), jnp.float32),    # i,f,z,o pre-acts
+        "r": dense_init(ks[1], (H, dh, 4 * dh), jnp.float32, scale=0.5),
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "w_up": dense_init(ks[2], (d, d_ff), dtype),
+        "w_down": dense_init(ks[3], (d_ff, d), dtype),
+        "norm_gamma": ones_table(cfg.elastic.num_subnets, d),
+        "ffn_gamma": ones_table(cfg.elastic.num_subnets, d),
+    }
+
+
+def _slstm_cell(p, cfg: ArchConfig, xt, state):
+    """One sLSTM step. xt: (B, 4d) pre-activations from input proj."""
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    c, n, hprev, m = state
+    rec = jnp.einsum("bhd,hde->bhe", hprev.reshape(-1, H, dh), p["r"]).reshape(-1, 4 * d)
+    raw = xt + rec + p["b"]
+    i_raw, f_raw, z_raw, o_raw = jnp.split(raw, 4, axis=-1)
+    lf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(lf + m, i_raw)
+    iprime = jnp.exp(i_raw - m_new)
+    fprime = jnp.exp(lf + m - m_new)
+    c_new = fprime * c + iprime * jnp.tanh(z_raw)
+    n_new = fprime * n + iprime
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(p, cfg: ArchConfig, x, ctrl, *, slice_mode: str = "mask"):
+    B, S, d = x.shape
+    h = ops.subnet_norm(x, p["norm_gamma"], ctrl["subnet_id"], eps=cfg.norm_eps,
+                        kind=cfg.norm)
+    pre = h.astype(jnp.float32) @ p["w_x"]                    # (B,S,4d)
+    zero = jnp.zeros((B, d), jnp.float32)
+    state0 = (zero, zero, zero, jnp.full((B, d), -1e30, jnp.float32))
+    _, hs = lax.scan(lambda s, xt: _slstm_cell(p, cfg, xt, s), state0,
+                     jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    x = x + y
+    # post-FFN (GELU, proj factor 4/3) with elastic width
+    hf = ops.subnet_norm(x, p["ffn_gamma"], ctrl["subnet_id"], eps=cfg.norm_eps,
+                         kind=cfg.norm)
+    a = jax.nn.gelu(hf @ p["w_up"])
+    a = ops.slice_mask(a, jnp.minimum(ctrl["slstm_ffn_width"], p["w_up"].shape[1]))
+    return x + (a @ p["w_down"]).astype(x.dtype)
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_decode(p, cfg: ArchConfig, x, ctrl, cache, index):
+    h = ops.subnet_norm(x, p["norm_gamma"], ctrl["subnet_id"], eps=cfg.norm_eps,
+                        kind=cfg.norm)
+    pre = (h.astype(jnp.float32) @ p["w_x"])[:, 0]
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, hh, m), hnew = _slstm_cell(p, cfg, pre, state)
+    x = x + hnew[:, None].astype(x.dtype)
+    hf = ops.subnet_norm(x, p["ffn_gamma"], ctrl["subnet_id"], eps=cfg.norm_eps,
+                         kind=cfg.norm)
+    a = jax.nn.gelu(hf @ p["w_up"])
+    a = ops.slice_mask(a, jnp.minimum(ctrl["slstm_ffn_width"], p["w_up"].shape[1]))
+    x = x + (a @ p["w_down"]).astype(x.dtype)
+    return x, {"c": c, "n": n, "h": hh, "m": m}

@@ -1,0 +1,2 @@
+"""Roofline analysis: HLO collective-byte parsing + the three-term
+(compute / memory / collective) model over TPU v5e constants."""

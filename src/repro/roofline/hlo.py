@@ -1,0 +1,98 @@
+"""Parse collective traffic out of compiled/lowered HLO text.
+
+``cost_analysis()`` does not expose collective bytes, so we walk the
+HLO and sum operand/result sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, converting each to
+*wire bytes per device* with the standard ring-algorithm factors:
+
+    all-gather        result_bytes * (n-1)/n
+    reduce-scatter    input_bytes  * (n-1)/n
+    all-reduce        2 * bytes * (n-1)/n      (RS + AG)
+    all-to-all        bytes * (n-1)/n
+    collective-permute bytes                    (point-to-point)
+
+``n`` comes from the op's replica_groups when present.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_ALT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _tensor_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_ALT_RE.search(line)
+    if m:                                     # replica_groups=[G,n]<=...
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """(total wire bytes per device, per-op-kind breakdown).
+
+    Skips the '-done' halves of async pairs (counted at '-start').
+    """
+    per_kind: Dict[str, float] = defaultdict(float)
+    for m in re.finditer(
+            r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s+=\s+([^\n]*)$", hlo_text, re.M):
+        line = m.group(1)
+        cm = re.match(
+            r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start|-done)?\(", line)
+        if not cm:
+            continue
+        type_str, kind, phase = cm.group(1), cm.group(2), cm.group(3)
+        if phase == "-done":
+            continue
+        size = _tensor_bytes(type_str)
+        n = _group_size(line)
+        frac = (n - 1) / max(n, 1)
+        if kind == "all-reduce":
+            wire = 2 * size * frac
+        elif kind == "collective-permute":
+            wire = size
+        elif kind == "reduce-scatter":
+            wire = size * (n - 1)        # result is 1/n of the input
+        else:                            # all-gather, all-to-all
+            wire = size * frac
+        per_kind[kind] += wire
+    return float(sum(per_kind.values())), dict(per_kind)
+
+
+def collective_count(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for m in _COLL_RE.finditer(hlo_text):
+        out[m.group(2)] += 1
+    return dict(out)

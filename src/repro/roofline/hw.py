@@ -1,0 +1,7 @@
+"""Hardware constants for the roofline model (TPU v5e, per chip)."""
+
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW_PER_LINK = 50e9       # bytes/s per link
+
+V5E_HBM_BYTES = 16 * 2**30   # capacity check for memory_analysis

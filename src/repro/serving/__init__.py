@@ -1,0 +1,3 @@
+"""SuperServe serving layer: profiler, EDF queue, scheduling policies
+(SlackFit et al.), discrete-event simulator, trace generators, and the
+asyncio router/worker runtime hosting a SubNetAct supernet."""

@@ -1,0 +1,42 @@
+"""Success metrics (paper §6.1): SLO attainment (R1) and mean serving
+accuracy over SLO-satisfying queries (R2)."""
+from __future__ import annotations
+
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.queue import Query
+
+
+def slo_attainment(queries: Sequence[Query]) -> float:
+    """Fraction of queries completed within their deadline (drops and
+    re-enqueue losses count as misses)."""
+    if not queries:
+        return 1.0
+    ok = sum(1 for q in queries
+             if q.finish is not None and q.finish <= q.deadline and not q.dropped)
+    return ok / len(queries)
+
+
+def mean_serving_accuracy(queries: Sequence[Query]) -> float:
+    """Mean profiled accuracy over queries that satisfied their SLO."""
+    accs = [q.served_acc for q in queries
+            if q.finish is not None and q.finish <= q.deadline
+            and not q.dropped and q.served_acc is not None]
+    return float(np.mean(accs)) if accs else 0.0
+
+
+def goodput(queries: Sequence[Query], duration: float) -> float:
+    ok = sum(1 for q in queries
+             if q.finish is not None and q.finish <= q.deadline and not q.dropped)
+    return ok / max(duration, 1e-9)
+
+
+def latency_percentiles(queries: Sequence[Query],
+                        ps: Tuple[float, ...] = (50, 99)) -> List[float]:
+    lats = [q.finish - q.arrival for q in queries
+            if q.finish is not None and not q.dropped]
+    if not lats:
+        return [float("nan")] * len(ps)
+    return [float(np.percentile(lats, p)) for p in ps]

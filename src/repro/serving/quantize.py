@@ -1,0 +1,76 @@
+"""Weight-only int8 for the decode path (beyond-paper §Perf lever A5).
+
+Decode is weight-streaming-bound: every step reads all resident weights
+once. Storing matmul weights as int8 with per-output-channel scales
+halves the HBM bytes per step; dequantization happens after the
+HBM->VMEM stream (on TPU the convert fuses into the consumer matmul),
+so wire/HBM traffic is int8 while compute stays bf16.
+
+SubNetAct composes cleanly: quantization is per-channel along the SAME
+output axes WeightSlice slices, so every subnet of the quantized
+supernet is exactly the quantized version of that subnet.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# leaves worth quantizing: big matmul weights (>= min_elems, rank >= 2)
+MIN_ELEMS = 1 << 16
+
+
+def _is_weight(leaf) -> bool:
+    return (hasattr(leaf, "ndim") and leaf.ndim >= 2
+            and leaf.size >= MIN_ELEMS
+            and leaf.dtype in (jnp.bfloat16, jnp.float32, jnp.dtype("bfloat16"),
+                               jnp.dtype("float32")))
+
+
+def quantize_tree(params: Any) -> Tuple[Any, Any]:
+    """-> (q_tree, scale_tree). Non-weight leaves pass through in q_tree
+    with a None scale."""
+    def q(leaf):
+        if not _is_weight(leaf):
+            return leaf, None
+        f = leaf.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(f), axis=tuple(range(leaf.ndim - 1)),
+                       keepdims=True)                     # per out-channel
+        scale = jnp.maximum(amax / 127.0, 1e-12)
+        qv = jnp.clip(jnp.round(f / scale), -127, 127).astype(jnp.int8)
+        return qv, scale.astype(jnp.float32)
+
+    flat, tdef = jax.tree_util.tree_flatten(params)
+    pairs = [q(l) for l in flat]
+    return (tdef.unflatten([p[0] for p in pairs]),
+            tdef.unflatten([p[1] if p[1] is not None else jnp.zeros(())
+                            for p in pairs]))
+
+
+def dequantize_tree(q_tree: Any, scale_tree: Any, dtype=jnp.bfloat16) -> Any:
+    def dq(qv, scale):
+        if qv.dtype != jnp.int8:
+            return qv
+        return (qv.astype(jnp.float32) * scale).astype(dtype)
+
+    return jax.tree.map(dq, q_tree, scale_tree)
+
+
+def quantized_bytes(q_tree: Any) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(q_tree))
+
+
+def quantize_specs(param_specs: Any) -> Tuple[Any, Any]:
+    """ShapeDtypeStruct version for the dry-run (no allocation)."""
+    def q(leaf):
+        if not _is_weight(leaf):
+            return leaf, jax.ShapeDtypeStruct((), jnp.float32)
+        scale_shape = tuple(1 for _ in leaf.shape[:-1]) + (leaf.shape[-1],)
+        return (jax.ShapeDtypeStruct(leaf.shape, jnp.int8),
+                jax.ShapeDtypeStruct(scale_shape, jnp.float32))
+
+    flat, tdef = jax.tree_util.tree_flatten(param_specs)
+    pairs = [q(l) for l in flat]
+    return (tdef.unflatten([p[0] for p in pairs]),
+            tdef.unflatten([p[1] for p in pairs]))

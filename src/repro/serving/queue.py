@@ -1,0 +1,63 @@
+"""Queries and the router's global earliest-deadline-first queue
+(paper §5: "queries ... are enqueued to a global EDF queue")."""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass(order=True)
+class Query:
+    deadline: float
+    seq: int = field(compare=True)          # FIFO tie-break
+    arrival: float = field(compare=False, default=0.0)
+    qid: int = field(compare=False, default=0)
+    # filled at completion
+    finish: Optional[float] = field(compare=False, default=None)
+    served_acc: Optional[float] = field(compare=False, default=None)
+    dropped: bool = field(compare=False, default=False)
+
+
+class EDFQueue:
+    """Earliest-deadline-first priority queue with O(log n) push/pop and
+    O(1) head-slack lookup (§A.3: "sub-ms O(1) EDF queue lookup")."""
+
+    def __init__(self):
+        self._heap: List[Query] = []
+        self._count = itertools.count()
+
+    def push(self, q: Query) -> None:
+        q.seq = next(self._count)
+        heapq.heappush(self._heap, q)
+
+    def pop(self) -> Query:
+        return heapq.heappop(self._heap)
+
+    def peek(self) -> Optional[Query]:
+        return self._heap[0] if self._heap else None
+
+    def head_slack(self, now: float) -> Optional[float]:
+        """Remaining slack of the most urgent query (SlackFit's signal)."""
+        return self._heap[0].deadline - now if self._heap else None
+
+    def pop_batch(self, n: int) -> List[Query]:
+        """Dequeue the n most urgent queries."""
+        return [heapq.heappop(self._heap) for _ in range(min(n, len(self._heap)))]
+
+    def drop_expired(self, now: float, min_service: float) -> List[Query]:
+        """Drop queries that cannot possibly meet their deadline even at
+        the fastest control choice (the paper's infeasible-query drop)."""
+        dropped = []
+        while self._heap and self._heap[0].deadline - now < min_service:
+            q = heapq.heappop(self._heap)
+            q.dropped = True
+            dropped.append(q)
+        return dropped
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

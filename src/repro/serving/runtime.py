@@ -1,0 +1,155 @@
+"""Asyncio router + worker runtime (paper §5) hosting a *real* JAX
+supernet via SubNetAct.
+
+The router owns the global EDF queue and invokes the pluggable policy
+whenever a worker signals availability and the queue is non-empty; the
+worker actuates the chosen subnet *in place* by passing a different
+control tuple to the same jitted executable — no reload, no recompile
+(SubNetAct). Mirrors the paper's C++/gRPC architecture with in-process
+asyncio semantics (async submission, callbacks, worker heartbeats).
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.metrics import mean_serving_accuracy, slo_attainment
+from repro.serving.policies import Policy
+from repro.serving.profiler import LatencyProfile
+from repro.serving.queue import EDFQueue, Query
+
+
+@dataclass
+class ServedQuery:
+    query: Query
+    payload: Any                       # model input (e.g. token array row)
+    done: asyncio.Future = None        # resolves to (prediction, acc)
+
+
+@dataclass
+class WorkerHandle:
+    """One worker hosting the supernet. ``run(subnet_idx, payloads)``
+    executes the actuated subnet on a batch and returns predictions."""
+
+    wid: int
+    run: Callable[[int, List[Any]], Any]
+    alive: bool = True
+    current_subnet: int = -1
+
+
+class Router:
+    """Asynchronous router: enqueue -> schedule -> dispatch -> respond."""
+
+    def __init__(self, profile: LatencyProfile, policy: Policy,
+                 workers: Sequence[WorkerHandle]):
+        self.profile = profile
+        self.policy = policy
+        self.workers = list(workers)
+        self.edf = EDFQueue()
+        self._payloads: Dict[int, ServedQuery] = {}
+        self._idle: asyncio.Queue = asyncio.Queue()
+        self._qid = 0
+        self.completed: List[Query] = []
+        self._closed = False
+
+    async def start(self):
+        for w in self.workers:
+            if w.alive:
+                self._idle.put_nowait(w)
+        self._task = asyncio.create_task(self._schedule_loop())
+
+    async def submit(self, payload: Any, slo_s: float) -> asyncio.Future:
+        now = time.perf_counter()
+        q = Query(deadline=now + slo_s, seq=0, arrival=now, qid=self._qid)
+        self._qid += 1
+        sq = ServedQuery(q, payload, asyncio.get_event_loop().create_future())
+        self._payloads[q.qid] = sq
+        self.edf.push(q)
+        return sq.done
+
+    def kill_worker(self, wid: int):
+        """Fault injection: worker stops accepting batches (heartbeat
+        loss); SlackFit absorbs the capacity loss by actuating down."""
+        for w in self.workers:
+            if w.wid == wid:
+                w.alive = False
+
+    async def _schedule_loop(self):
+        loop = asyncio.get_event_loop()
+        while not self._closed:
+            worker: WorkerHandle = await self._idle.get()
+            if not worker.alive:
+                continue            # dead workers leave the pool
+            while not len(self.edf) and not self._closed:
+                await asyncio.sleep(0.0005)
+            if self._closed:
+                return
+            now = time.perf_counter()
+            dropped = self.edf.drop_expired(now, float(self.profile.lat[:, 0].min()))
+            for q in dropped:
+                sq = self._payloads.pop(q.qid, None)
+                if sq is not None:
+                    self.completed.append(q)
+                    if not sq.done.done():
+                        sq.done.set_result((None, 0.0))
+            if not len(self.edf):
+                self._idle.put_nowait(worker)
+                continue
+            slack = self.edf.head_slack(now)
+            dec = self.policy.choose(self.profile, slack, len(self.edf))
+            batch = self.edf.pop_batch(dec.batch_size)
+            sqs = [self._payloads.pop(q.qid) for q in batch]
+            acc = float(self.profile.accs[dec.pareto_idx])
+            loop.create_task(self._run_batch(worker, dec.pareto_idx, sqs, acc))
+
+    async def _run_batch(self, worker: WorkerHandle, subnet_idx: int,
+                         sqs: List[ServedQuery], acc: float):
+        payloads = [s.payload for s in sqs]
+        # SubNetAct actuation == a different control tuple; executed in a
+        # thread so the event loop keeps routing.
+        preds = await asyncio.to_thread(worker.run, subnet_idx, payloads)
+        worker.current_subnet = subnet_idx
+        fin = time.perf_counter()
+        for i, s in enumerate(sqs):
+            s.query.finish = fin
+            s.query.served_acc = acc
+            self.completed.append(s.query)
+            if not s.done.done():
+                s.done.set_result((np.asarray(preds)[i], acc))
+        if worker.alive:
+            self._idle.put_nowait(worker)
+
+    async def drain(self, timeout: float = 10.0):
+        t0 = time.perf_counter()
+        while self._payloads and time.perf_counter() - t0 < timeout:
+            await asyncio.sleep(0.01)
+        self._closed = True
+        self._task.cancel()
+        # account dropped-but-unresolved queries
+        for s in self._payloads.values():
+            s.query.dropped = True
+            self.completed.append(s.query)
+            if not s.done.done():
+                s.done.set_result((None, 0.0))
+        self._payloads.clear()
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "slo_attainment": slo_attainment(self.completed),
+            "mean_acc": mean_serving_accuracy(self.completed),
+            "served": float(len(self.completed)),
+        }
+
+
+def make_supernet_workers(n: int, step_fn: Callable[[int, Any], Any],
+                          pad_batch: Callable[[List[Any]], Any]) -> List[WorkerHandle]:
+    """Workers sharing one jitted supernet step. ``step_fn(subnet_idx,
+    batch_array)`` must be jit-compiled with the control tuple as data
+    so actuation never recompiles."""
+    def run(subnet_idx: int, payloads: List[Any]):
+        return step_fn(subnet_idx, pad_batch(payloads))
+    return [WorkerHandle(wid=i, run=run) for i in range(n)]

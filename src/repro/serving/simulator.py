@@ -1,0 +1,177 @@
+"""Deterministic discrete-event simulator of the SuperServe router +
+worker pool (paper §5 architecture, §6 experiments).
+
+Models: global EDF queue, policy invocation on worker-availability,
+per-batch service latency from the profiler, SubNetAct actuation vs.
+model-switch loading costs, worker faults with in-flight re-enqueue
+(transparent fault tolerance, Fig 11a), stragglers with optional
+backup-batch hedging, and full per-query accounting.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.metrics import mean_serving_accuracy, slo_attainment
+from repro.serving.policies import Decision, Policy
+from repro.serving.profiler import (SUBNETACT_ACTUATION_S, HardwareProfile,
+                                    LatencyProfile, RTX2080TI, loading_latency)
+from repro.serving.queue import EDFQueue, Query
+
+
+@dataclass
+class SimConfig:
+    n_workers: int = 8
+    slo: float = 0.036                      # paper's 36ms default
+    actuation_delay: float = SUBNETACT_ACTUATION_S
+    load_on_switch: bool = False            # pay weight-loading on model change
+    hw: HardwareProfile = RTX2080TI
+    straggler_prob: float = 0.0
+    straggler_factor: float = 3.0
+    hedging: bool = False                   # backup-batch straggler mitigation
+    hedge_trigger: float = 2.0              # x expected latency
+    fault_times: Dict[int, float] = field(default_factory=dict)
+    drop_infeasible: bool = True
+    seed: int = 0
+
+
+@dataclass
+class DispatchRecord:
+    t: float
+    worker: int
+    batch: int
+    pareto_idx: int
+    acc: float
+    latency: float
+    queue_len: int
+
+
+@dataclass
+class SimResult:
+    queries: List[Query]
+    dispatches: List[DispatchRecord]
+    duration: float
+
+    @property
+    def slo_attainment(self) -> float:
+        return slo_attainment(self.queries)
+
+    @property
+    def mean_acc(self) -> float:
+        return mean_serving_accuracy(self.queries)
+
+    def series(self, window: float = 1.0):
+        """Per-window (t, qps, mean batch, mean acc) system dynamics."""
+        if not self.queries:
+            return np.zeros((0, 4))
+        t_end = self.duration
+        edges = np.arange(0.0, t_end + window, window)
+        arr = np.array([q.arrival for q in self.queries])
+        qps, _ = np.histogram(arr, edges)
+        rows = []
+        for i in range(len(edges) - 1):
+            lo, hi = edges[i], edges[i + 1]
+            ds = [d for d in self.dispatches if lo <= d.t < hi]
+            rows.append((lo, qps[i] / window,
+                         float(np.mean([d.batch for d in ds])) if ds else 0.0,
+                         float(np.mean([d.acc for d in ds])) if ds else 0.0))
+        return np.asarray(rows)
+
+
+# event kinds, ordered so simultaneous events process deterministically
+_ARRIVAL, _FAULT, _FREE = 0, 1, 2
+
+
+def simulate(arrivals: Sequence[float], profile: LatencyProfile,
+             policy: Policy, cfg: SimConfig) -> SimResult:
+    rng = np.random.default_rng(cfg.seed)
+    policy.reset()
+
+    queries = [Query(deadline=float(t) + cfg.slo, seq=i, arrival=float(t), qid=i)
+               for i, t in enumerate(arrivals)]
+    duration = (float(arrivals[-1]) if len(arrivals) else 0.0) + 4 * cfg.slo
+
+    events: List[Tuple[float, int, int]] = []
+    for q in queries:
+        heapq.heappush(events, (q.arrival, _ARRIVAL, q.qid))
+    for wid, t in cfg.fault_times.items():
+        heapq.heappush(events, (float(t), _FAULT, wid))
+
+    edf = EDFQueue()
+    idle: List[int] = list(range(cfg.n_workers))
+    dead: set = set()
+    worker_model: Dict[int, Optional[int]] = {w: None for w in idle}
+    inflight: Dict[int, Tuple[float, List[Query]]] = {}
+    dispatches: List[DispatchRecord] = []
+    min_service = float(profile.lat.min())
+
+    def dispatch(now: float) -> None:
+        while idle and len(edf):
+            if cfg.drop_infeasible:
+                edf.drop_expired(now, min_service)
+            if not len(edf):
+                return
+            slack = edf.head_slack(now)
+            dec: Optional[Decision] = policy.choose(profile, slack, len(edf))
+            if dec is None:
+                return
+            wid = idle.pop(0)
+            batch = edf.pop_batch(dec.batch_size)
+            eff_b = len(batch)
+            lat = profile.latency(dec.pareto_idx, eff_b)
+            # actuation: SubNetAct control-swap vs model-switch loading
+            if worker_model[wid] != dec.pareto_idx:
+                lat += cfg.actuation_delay
+                if cfg.load_on_switch:
+                    wb = (profile.points[dec.pareto_idx].weight_mb * 2**20
+                          if profile.points else 100e6)
+                    lat += loading_latency(cfg.hw, wb)
+                worker_model[wid] = dec.pareto_idx
+            expected = lat
+            if cfg.straggler_prob and rng.random() < cfg.straggler_prob:
+                lat *= cfg.straggler_factor
+                if cfg.hedging and idle:
+                    # backup batch on a spare worker after the trigger
+                    bwid = idle.pop(0)
+                    backup_fin = now + cfg.hedge_trigger * expected + expected
+                    lat = min(lat, backup_fin - now)
+                    inflight[bwid] = (backup_fin, [])
+                    heapq.heappush(events, (backup_fin, _FREE, bwid))
+            fin = now + lat
+            acc = float(profile.accs[dec.pareto_idx])
+            for q in batch:
+                q.finish = fin
+                q.served_acc = acc
+            inflight[wid] = (fin, batch)
+            dispatches.append(DispatchRecord(now, wid, eff_b, dec.pareto_idx,
+                                             acc, lat, len(edf)))
+            heapq.heappush(events, (fin, _FREE, wid))
+
+    while events:
+        now, kind, ident = heapq.heappop(events)
+        if kind == _ARRIVAL:
+            edf.push(queries[ident])
+            dispatch(now)
+        elif kind == _FREE:
+            if ident in dead:
+                continue
+            inflight.pop(ident, None)
+            idle.append(ident)
+            dispatch(now)
+        elif kind == _FAULT:
+            dead.add(ident)
+            if ident in idle:
+                idle.remove(ident)
+            # transparent fault tolerance: re-enqueue the in-flight batch
+            if ident in inflight:
+                _, batch = inflight.pop(ident)
+                for q in batch:
+                    q.finish = None
+                    q.served_acc = None
+                    edf.push(q)
+            dispatch(now)
+
+    return SimResult(queries=queries, dispatches=dispatches, duration=duration)

@@ -1,0 +1,3 @@
+"""Training substrate: AdamW (+ZeRO sharded states), sandwich-rule
+supernet training, synthetic data, atomic sharded checkpoints with
+cross-mesh restore, int8-compressed gradient all-reduce."""

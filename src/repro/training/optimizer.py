@@ -1,0 +1,106 @@
+"""AdamW with optional ZeRO-1 state sharding.
+
+Pure-function optimizer (no framework): ``init`` -> state pytree,
+``apply`` -> (new_params, new_state). ZeRO-1: the fp32 moments are
+sharded over the DP axes (state_shardings) while params stay on their
+TP layout — XLA inserts the gather/scatter around the update, which the
+latency-hiding scheduler overlaps with the next step's compute.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import ShardingPlan
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params) -> Dict[str, Any]:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply(cfg: AdamWConfig, params, grads, state):
+    """One AdamW update (with clipping + decoupled weight decay)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        step_dir = mh / (jnp.sqrt(vh) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (step_dir + decay)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {"m": tdef.unflatten([o[1] for o in out]),
+                 "v": tdef.unflatten([o[2] for o in out]),
+                 "step": step}
+    return new_params, new_state, {"grad_norm": gn, "lr": lr}
+
+
+def state_shardings(plan: ShardingPlan, params) -> Dict[str, Any]:
+    """ZeRO-1: moments sharded over DP on the first axis that divides;
+    falls back to the param's own TP spec."""
+    dp = plan.dp_axes
+    dpn = plan.dp_size
+
+    def one(path, leaf):
+        shape = leaf.shape
+        for i, s in enumerate(shape):
+            if s % max(dpn, 1) == 0 and s >= dpn:
+                spec = [None] * len(shape)
+                spec[i] = dp
+                return NamedSharding(plan.mesh, P(*spec))
+        return NamedSharding(plan.mesh, P(*([None] * len(shape))))
+
+    moments = jax.tree_util.tree_map_with_path(one, params)
+    return {"m": moments, "v": jax.tree.map(lambda s: s, moments),
+            "step": NamedSharding(plan.mesh, P())}

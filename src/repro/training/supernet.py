@@ -1,0 +1,88 @@
+"""Sandwich-rule supernet training (OFA/BigNAS style — the substrate
+the paper assumes: one weight-shared supernet whose every subnet is
+servable).
+
+Each step accumulates gradients from (a) the max subnet, (b) the min
+subnet, and (c) ``n_random`` sampled subnets — control tuples are
+sampled *inside* jit (core.subnet.sample_control_jax), so one compiled
+step trains the entire architecture space. The per-subnet SubnetNorm
+gamma rows receive gradients only from their own subnet (the gather in
+subnet_norm routes them), which is exactly the paper's 'non-shared
+bookkeeping trained per subnet'.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import subnet as sn
+from repro.models import lm
+
+
+def make_controls(cfg: ArchConfig):
+    """Static (max, min) control tuples as jnp trees."""
+    cmax = {k: jnp.asarray(v) for k, v in sn.make_control(cfg, sn.max_subnet(cfg)).items()}
+    cmin = {k: jnp.asarray(v) for k, v in sn.make_control(cfg, sn.min_subnet(cfg)).items()}
+    return cmax, cmin
+
+
+def sandwich_loss(params, cfg: ArchConfig, batch, rng, *, n_random: int = 1,
+                  slice_mode: str = "mask", remat: bool = False,
+                  moe_groups: int = 1):
+    """Mean loss over {max, min, n_random sampled} subnets."""
+    cmax, cmin = make_controls(cfg)
+    losses = [
+        lm.loss_fn(params, cfg, batch, cmax, slice_mode=slice_mode,
+                   remat=remat, moe_groups=moe_groups),
+        lm.loss_fn(params, cfg, batch, cmin, slice_mode=slice_mode,
+                   remat=remat, moe_groups=moe_groups),
+    ]
+    keys = jax.random.split(rng, max(n_random, 1))
+    for i in range(n_random):
+        ctrl = sn.sample_control_jax(cfg, keys[i])
+        losses.append(lm.loss_fn(params, cfg, batch, ctrl, slice_mode=slice_mode,
+                                 remat=remat, moe_groups=moe_groups))
+    return sum(losses) / len(losses)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg, *, n_random: int = 1,
+                    slice_mode: str = "mask", remat: bool = False,
+                    moe_groups: int = 1, microbatch: int = 0):
+    """Returns ``step(params, opt_state, batch, rng) -> (params, state,
+    metrics)``. ``microbatch``: gradient-accumulation chunks along batch
+    dim (0 = off)."""
+    from repro.training import optimizer as opt
+
+    def loss_fn(p, batch, rng):
+        return sandwich_loss(p, cfg, batch, rng, n_random=n_random,
+                             slice_mode=slice_mode, remat=remat,
+                             moe_groups=moe_groups)
+
+    def step(params, opt_state, batch, rng):
+        if microbatch:
+            n = microbatch
+
+            def split(x):
+                return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb_i):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb_i, rng)
+                return (loss_acc + l / n,
+                        jax.tree.map(lambda a, b: a + b / n, grad_acc, g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (0.0, zeros), mb)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng)
+        params2, opt_state2, m = opt.apply(opt_cfg, params, grads, opt_state)
+        m["loss"] = loss
+        return params2, opt_state2, m
+
+    return step

@@ -1,0 +1,110 @@
+"""Trainer driver: periodic atomic checkpoints, crash/preemption
+restart from the latest valid step, straggler detection via per-step
+time outliers, and elastic restore onto a different mesh.
+
+Designed so the *loop* is restartable at any instant:
+  * data is stateless-by-step (training/data.py),
+  * checkpoints are atomic (training/checkpoint.py),
+  * restore consumes a ShardingPlan, so the surviving mesh after a
+    failure can differ from the one that wrote the checkpoint.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training import checkpoint as ckpt
+from repro.training import data as data_mod
+from repro.training import optimizer as opt
+from repro.training import supernet
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    straggler_factor: float = 3.0      # step > factor * median -> flagged
+    log_every: int = 10
+
+
+@dataclass
+class TrainerState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+    straggler_steps: List[int] = field(default_factory=list)
+    losses: List[float] = field(default_factory=list)
+
+
+class Trainer:
+    def __init__(self, cfg, opt_cfg: opt.AdamWConfig, tcfg: TrainerConfig,
+                 task: data_mod.SyntheticTask, *, n_random: int = 1,
+                 step_fn: Optional[Callable] = None, plan=None):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.task = task
+        self.plan = plan
+        self.step_fn = step_fn or jax.jit(
+            supernet.make_train_step(cfg, opt_cfg, n_random=n_random))
+
+    # -- lifecycle -----------------------------------------------------
+    def init_state(self, key) -> TrainerState:
+        from repro.models import lm
+        params = lm.init_model(key, self.cfg)
+        return TrainerState(params=params, opt_state=opt.init(params))
+
+    def resume_or_init(self, key) -> TrainerState:
+        """Restart-from-failure entry point."""
+        st = self.init_state(key)
+        last = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if last is not None:
+            shardings = None
+            if self.plan is not None:
+                shardings = {"params": self.plan.params(st.params),
+                             "opt": opt.state_shardings(self.plan, st.params)}
+            tree, extra = ckpt.restore(
+                self.tcfg.ckpt_dir, {"params": st.params, "opt": st.opt_state},
+                shardings=shardings)
+            st.params, st.opt_state = tree["params"], tree["opt"]
+            st.step = int(extra.get("step", last))
+        return st
+
+    # -- loop ----------------------------------------------------------
+    def run(self, st: TrainerState, *, until: Optional[int] = None,
+            crash_at: Optional[int] = None) -> TrainerState:
+        """Run to ``until`` (or total_steps). ``crash_at`` simulates a
+        hard failure (tests/examples) AFTER that step's compute, before
+        its checkpoint."""
+        until = until or self.tcfg.total_steps
+        times: List[float] = []
+        while st.step < until:
+            batch = {k: jnp.asarray(v) for k, v in self.task.batch(st.step).items()}
+            t0 = time.perf_counter()
+            st.params, st.opt_state, metrics = self.step_fn(
+                st.params, st.opt_state, batch, jax.random.PRNGKey(st.step))
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            st.step += 1
+            st.losses.append(float(metrics["loss"]))
+            # straggler detection: compare against the running median
+            times.append(dt)
+            if len(times) >= 8:
+                med = float(np.median(times[-32:]))
+                if dt > self.tcfg.straggler_factor * med:
+                    st.straggler_steps.append(st.step)
+            if crash_at is not None and st.step == crash_at:
+                raise RuntimeError(f"simulated node failure at step {st.step}")
+            if st.step % self.tcfg.ckpt_every == 0 or st.step == until:
+                ckpt.save(self.tcfg.ckpt_dir, st.step,
+                          {"params": st.params, "opt": st.opt_state},
+                          extra={"step": st.step})
+                ckpt.prune(self.tcfg.ckpt_dir, keep=self.tcfg.keep)
+        return st

@@ -1,0 +1,100 @@
+"""SubNetAct operator semantics (paper §3): LayerSelect, SubnetNorm,
+WeightSlice — including mask-mode vs switch-mode equivalence at the
+discrete option widths (the two modes must actuate the SAME subnet)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import operators as ops
+
+
+class TestLayerSelect:
+    def test_gate_true_applies_block(self):
+        x = jnp.arange(8.0)
+        y = ops.layer_select(jnp.bool_(True), lambda v: v * 2, x)
+        np.testing.assert_allclose(y, x * 2)
+
+    def test_gate_false_is_identity(self):
+        x = jnp.arange(8.0)
+        y = ops.layer_select(jnp.bool_(False), lambda v: v * 2, x)
+        np.testing.assert_allclose(y, x)
+
+    def test_jit_actuation_no_recompile(self):
+        """Gate is data: one trace serves both depths."""
+        traces = []
+
+        @jax.jit
+        def f(gate, x):
+            traces.append(1)
+            return ops.layer_select(gate, lambda v: v + 1, x)
+
+        x = jnp.ones(4)
+        f(jnp.bool_(True), x)
+        f(jnp.bool_(False), x)
+        assert len(traces) == 1
+
+
+class TestSubnetNorm:
+    def test_gathers_per_subnet_gamma(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 16))
+        table = jnp.stack([jnp.full((16,), 1.0), jnp.full((16,), 2.0)])
+        y0 = ops.subnet_norm(x, table, jnp.int32(0))
+        y1 = ops.subnet_norm(x, table, jnp.int32(1))
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y0) * 2.0, rtol=1e-5)
+
+    def test_rms_is_normalized(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (128, 64)) * 7.0
+        table = jnp.ones((1, 64))
+        y = ops.subnet_norm(x, table, jnp.int32(0))
+        rms = jnp.sqrt(jnp.mean(y * y, -1))
+        np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)
+
+    def test_batchnorm_tables(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 3, 3, 8))
+        mean_t = jnp.stack([x.mean((0, 1, 2)), jnp.zeros(8)])
+        var_t = jnp.stack([x.var((0, 1, 2)), jnp.ones(8)])
+        g, b = jnp.ones(8), jnp.zeros(8)
+        y = ops.subnet_batch_norm(x, mean_t, var_t, g, b, jnp.int32(0))
+        np.testing.assert_allclose(np.asarray(y.mean((0, 1, 2))), 0.0, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(y.var((0, 1, 2))), 1.0, atol=1e-2)
+
+
+class TestWeightSlice:
+    def test_mask_zeroes_inactive(self):
+        x = jnp.ones((2, 8))
+        y = ops.slice_mask(x, jnp.int32(3))
+        assert float(y[:, :3].sum()) == 6.0
+        assert float(y[:, 3:].sum()) == 0.0
+
+    @pytest.mark.parametrize("k_in,k_out", [(4, 8), (8, 4), (8, 8)])
+    def test_mask_equals_dense_slice(self, k_in, k_out):
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (5, 8))
+        w = jax.random.normal(jax.random.PRNGKey(4), (8, 8))
+        y = ops.sliced_matmul(x, w, jnp.int32(k_in), jnp.int32(k_out), mode="mask")
+        expect = x[:, :k_in] @ w[:k_in, :k_out]
+        np.testing.assert_allclose(np.asarray(y[:, :k_out]), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-5)
+        assert float(jnp.abs(y[:, k_out:]).sum()) == 0.0
+
+    def test_switch_equals_mask_at_option_widths(self):
+        """The TPU-optimized switch mode must actuate the same subnet as
+        the paper-faithful mask mode at every discrete option."""
+        key = jax.random.PRNGKey(5)
+        x = jax.random.normal(key, (6, 16))
+        w = jax.random.normal(jax.random.PRNGKey(6), (16, 12))
+        ins, outs = [8, 16], [6, 12]
+        for b, (ki, ko) in enumerate(zip(ins, outs)):
+            y_mask = ops.sliced_matmul(x, w, jnp.int32(ki), jnp.int32(ko),
+                                       mode="mask")
+            y_switch = ops.sliced_matmul(x, w, None, None, mode="switch",
+                                         in_options=ins, out_options=outs,
+                                         bucket=jnp.int32(b))
+            np.testing.assert_allclose(np.asarray(y_mask), np.asarray(y_switch),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_switch_over_widths(self):
+        outs = ops.switch_over_widths(jnp.int32(1), [2, 4],
+                                      lambda k: jnp.full((3,), float(k)))
+        np.testing.assert_allclose(np.asarray(outs), 4.0)

@@ -1,0 +1,66 @@
+"""Pareto NAS + predictors (paper §2.2/§4.2 substrate)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, assigned_archs
+from repro.core import pareto
+from repro.core.subnet import enumerate_space
+
+
+class TestPredictors:
+    def test_conv_range_matches_paper(self):
+        """Paper §6.1: pareto subnets span ~0.9-7.5 GFLOPs, 73-80% acc."""
+        cfg = get_config("ofa_resnet")
+        pts = pareto.pareto_subnets(cfg)
+        gf = [p.gflops for p in pts]
+        acc = [p.acc for p in pts]
+        assert min(gf) < 2.0 and 6.5 < max(gf) < 8.5
+        assert 73.0 <= min(acc) < 78 and 79.5 < max(acc) <= 80.6
+
+    @pytest.mark.parametrize("arch", assigned_archs())
+    def test_monotone_acc_in_flops(self, arch):
+        cfg = get_config(arch)
+        pts = pareto.pareto_subnets(cfg)
+        accs = [p.acc for p in pts]
+        gfs = [p.gflops for p in pts]
+        assert accs == sorted(accs)
+        assert gfs == sorted(gfs)
+
+
+class TestParetoFilter:
+    @given(st.lists(st.tuples(st.floats(0.1, 10), st.floats(50, 90)),
+                    min_size=1, max_size=40))
+    @settings(max_examples=60, deadline=None)
+    def test_output_is_nondominated(self, pts_raw):
+        pts = [pareto.ParetoPoint(sub=None, acc=a, gflops=g, weight_mb=1.0)
+               for g, a in pts_raw]
+        out = pareto.pareto_filter(pts)
+        for i, p in enumerate(out):
+            for q in out:
+                if q is p:
+                    continue
+                assert not (q.gflops <= p.gflops and q.acc > p.acc + 1e-9), \
+                    "dominated point survived"
+        # sorted ascending
+        assert [p.gflops for p in out] == sorted(p.gflops for p in out)
+        assert [p.acc for p in out] == sorted(p.acc for p in out)
+
+    def test_uniform_sample(self):
+        cfg = get_config("ofa_resnet")
+        pts = pareto.pareto_subnets(cfg)
+        six = pareto.uniform_sample(pts, 6)
+        assert len(six) <= 6
+        assert six[0] is pts[0] and six[-1] is pts[-1]
+
+
+class TestMemoryAccounting:
+    def test_resident_supernet_cheaper_than_model_zoo(self):
+        """Paper Fig 5a: one resident supernet vs loading each pareto
+        subnet separately."""
+        cfg = get_config("ofa_resnet")
+        pts = pareto.pareto_subnets(cfg)
+        resident = pareto.subnet_weight_bytes(cfg, None, resident=True)
+        zoo = sum(pareto.subnet_weight_bytes(cfg, p.sub, resident=False)
+                  for p in pareto.uniform_sample(pts, 6))
+        assert zoo / resident > 2.0, "supernet must be >2x cheaper than 6 models"

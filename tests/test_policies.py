@@ -1,0 +1,107 @@
+"""Scheduling policies: Lemma A.1, bucket-structure properties (P1-P3,
+I3), SlackFit-vs-oracle approximation on small instances."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.serving import policies, profiler
+
+CFG = get_config("ofa_resnet")
+PROF = profiler.build_profile(CFG)
+
+
+class TestProfileStructure:
+    def test_p1_latency_monotone_in_batch(self):
+        assert (np.diff(PROF.lat, axis=1) >= -1e-12).all()
+
+    def test_p2_latency_monotone_in_accuracy(self):
+        order = np.argsort(PROF.accs)
+        lat_sorted = PROF.lat[order]
+        assert (np.diff(lat_sorted, axis=0) >= -1e-9).all()
+
+    def test_p3_batch_gaps_grow_with_accuracy(self):
+        order = np.argsort(PROF.accs)
+        gaps = PROF.lat[order, -1] - PROF.lat[order, 0]
+        assert (np.diff(gaps) >= -1e-9).all()
+
+    def test_i3_choices_thin_out_at_high_latency(self):
+        sizes = [len(m) for m in PROF.bucket_members]
+        assert np.mean(sizes[: len(sizes) // 4]) >= np.mean(sizes[-len(sizes) // 4:])
+
+
+class TestLemmaA1:
+    @given(b=st.integers(1, 64), d=st.floats(0.005, 0.3))
+    @settings(max_examples=60, deadline=None)
+    def test_pareto_utility_dominates(self, b, d):
+        """U(phi_p, B, d) >= U(phi_q, B, d) when latencies are similar
+        and phi_p pareto-dominates in accuracy."""
+        accs = PROF.accs
+        for i in range(len(accs) - 1):
+            hi, lo = accs[i + 1], accs[i]
+            lat_hi = PROF.latency(i + 1, b)
+            u_hi = hi * b if lat_hi < d else 0.0
+            u_lo = lo * b if PROF.latency(i, b) < d else 0.0
+            if abs(lat_hi - PROF.latency(i, b)) < 1e-4:
+                assert u_hi >= u_lo
+
+
+class TestSlackFit:
+    def test_high_slack_prefers_accuracy(self):
+        pi, bi = PROF.choose_slackfit(10.0, queue_len=1)
+        assert PROF.accs[pi] == PROF.accs.max()
+
+    def test_low_slack_prefers_throughput(self):
+        pi_lo, bi_lo = PROF.choose_slackfit(0.008, queue_len=1000)
+        pi_hi, bi_hi = PROF.choose_slackfit(0.25, queue_len=1000)
+        thr_lo = PROF.batches[bi_lo] / PROF.lat[pi_lo, bi_lo]
+        # low slack choice must at least not serve the max-acc net
+        assert PROF.accs[pi_lo] < PROF.accs.max()
+        assert thr_lo > 0
+
+    def test_chosen_latency_fits_slack_when_feasible(self):
+        for slack in (0.012, 0.02, 0.05, 0.1):
+            pi, bi = PROF.choose_slackfit(slack, queue_len=10_000)
+            assert PROF.lat[pi, bi] <= slack + 1e-9
+
+    def test_queue_cap_limits_batch(self):
+        pi, bi = PROF.choose_slackfit(0.25, queue_len=3)
+        assert PROF.batches[bi] <= 4      # smallest profiled batch >= 3
+
+    @given(slack=st.floats(0.001, 0.5), qlen=st.integers(1, 500))
+    @settings(max_examples=100, deadline=None)
+    def test_always_returns_valid_tuple(self, slack, qlen):
+        pi, bi = PROF.choose_slackfit(slack, qlen)
+        assert 0 <= pi < PROF.n_pareto and 0 <= bi < len(PROF.batches)
+
+
+class TestOracle:
+    def test_slackfit_tracks_oracle_on_small_instances(self):
+        """Greedy SlackFit utility within 70% of the brute-force ILP
+        objective on tiny instances (and never above it)."""
+        rng = np.random.default_rng(0)
+        for trial in range(5):
+            n = 6
+            arrivals = np.sort(rng.uniform(0, 0.05, n))
+            deadlines = arrivals + 0.08
+            opt = policies.oracle_schedule(arrivals, deadlines, PROF,
+                                           n_workers=1)
+            # greedy simulate with slackfit on 1 worker
+            from repro.serving.simulator import SimConfig, simulate
+            res = simulate(arrivals, PROF, policies.SlackFit(),
+                           SimConfig(n_workers=1, slo=0.08))
+            got = sum(q.served_acc for q in res.queries
+                      if q.finish and q.finish <= q.deadline and not q.dropped)
+            assert got <= opt + 1e-6
+            assert got >= 0.70 * opt, (trial, got, opt)
+
+
+def test_policy_decision_is_fast():
+    """Sub-millisecond control decisions (paper §A.3 requirement)."""
+    import time
+    pol = policies.SlackFit()
+    t0 = time.perf_counter()
+    for i in range(1000):
+        pol.choose(PROF, 0.02 + (i % 7) * 0.01, 1 + i % 300)
+    per_call = (time.perf_counter() - t0) / 1000
+    assert per_call < 1e-3, f"{per_call*1e3:.2f} ms per decision"

@@ -1,0 +1,81 @@
+"""Weight-only int8 serving mode (EXPERIMENTS §Perf A5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import subnet as sn
+from repro.models import lm
+from repro.serving import quantize as QZ
+from tests.conftest import tiny_dense
+
+
+@pytest.fixture(scope="module")
+def supernet():
+    cfg = tiny_dense(d_model=128, d_ff=512, vocab_size=512)
+    params = lm.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_roundtrip_error_bound(supernet):
+    _, params = supernet
+    q, sc = QZ.quantize_tree(params)
+    deq = QZ.dequantize_tree(q, sc, dtype=jnp.float32)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(deq)):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        if a.ndim >= 2 and a.size >= QZ.MIN_ELEMS:
+            # per-channel symmetric int8: |err| <= scale/2 = amax/254
+            amax = np.abs(a).max(axis=tuple(range(a.ndim - 1)), keepdims=True)
+            assert (np.abs(a - b) <= amax / 254 + 1e-7).all()
+        else:
+            np.testing.assert_array_equal(a, b)
+
+
+def test_wire_bytes_halved(supernet):
+    _, params = supernet
+    q, sc = QZ.quantize_tree(params)
+    orig = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+    wire = QZ.quantized_bytes(q) + QZ.quantized_bytes(sc)
+    assert wire < 0.65 * orig
+
+
+def test_decode_logits_close(supernet):
+    """int8 decode must track bf16 decode (weight-only quantization is
+    the production-grade lossy point: logits close, argmax preserved
+    on a clear-margin prompt)."""
+    cfg, params = supernet
+    ctrl = sn.make_control(cfg, sn.max_subnet(cfg))
+    cache = lm.init_cache(cfg, 2, 16)
+    toks = jnp.ones((2, 1), jnp.int32)
+    ref, _ = lm.decode_step(params, cfg, toks, ctrl, cache, jnp.int32(0))
+    q, sc = QZ.quantize_tree(params)
+    deq = QZ.dequantize_tree(q, sc, dtype=jnp.float32)
+    got, _ = lm.decode_step(deq, cfg, toks, ctrl, cache, jnp.int32(0))
+    err = float(jnp.abs(ref - got).max())
+    assert err < 0.25, err
+
+
+def test_quantize_specs_match_tree(supernet):
+    _, params = supernet
+    specs = jax.eval_shape(lambda: params)
+    q_sp, sc_sp = QZ.quantize_specs(specs)
+    q, sc = QZ.quantize_tree(params)
+    for a, b in zip(jax.tree.leaves(q_sp), jax.tree.leaves(q)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    for a, b in zip(jax.tree.leaves(sc_sp), jax.tree.leaves(sc)):
+        assert tuple(a.shape) == tuple(np.shape(b))
+
+
+def test_subnetact_commutes_with_quantization(supernet):
+    """Quantize-then-actuate == actuate-then-quantize at the logits
+    level (per-channel scales align with WeightSlice axes)."""
+    cfg, params = supernet
+    q, sc = QZ.quantize_tree(params)
+    deq = QZ.dequantize_tree(q, sc, dtype=jnp.float32)
+    batch = {"tokens": jnp.ones((1, 8), jnp.int32)}
+    for sub in (sn.min_subnet(cfg), sn.max_subnet(cfg)):
+        ctrl = sn.make_control(cfg, sub)
+        a = lm.forward(params, cfg, batch, ctrl)
+        b = lm.forward(deq, cfg, batch, ctrl)
+        assert float(jnp.abs(a - b).max()) < 0.3

@@ -1,0 +1,72 @@
+"""Hypothesis property tests: EDF queue invariants + simulator
+conservation (every query accounted exactly once)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.serving import policies, profiler, simulator
+from repro.serving.queue import EDFQueue, Query
+
+PROF = profiler.build_profile(get_config("ofa_resnet"))
+
+
+@given(st.lists(st.floats(0.0, 100.0), min_size=1, max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_edf_pops_in_deadline_order(deadlines):
+    q = EDFQueue()
+    for i, d in enumerate(deadlines):
+        q.push(Query(deadline=d, seq=0, arrival=0.0, qid=i))
+    popped = [q.pop().deadline for _ in range(len(deadlines))]
+    assert popped == sorted(popped)
+
+
+@given(st.lists(st.floats(0.0, 10.0), min_size=1, max_size=40),
+       st.floats(0.5, 5.0))
+@settings(max_examples=40, deadline=None)
+def test_edf_fifo_tie_break_and_slack(deadlines, now):
+    q = EDFQueue()
+    for i, d in enumerate(deadlines):
+        q.push(Query(deadline=d, seq=0, arrival=0.0, qid=i))
+    head = q.peek()
+    assert q.head_slack(now) == head.deadline - now
+    same = [i for i, d in enumerate(deadlines) if d == head.deadline]
+    assert head.qid == same[0]                  # FIFO among equal deadlines
+
+
+@given(st.lists(st.floats(0.0, 5.0), min_size=1, max_size=30),
+       st.floats(0.001, 0.02))
+@settings(max_examples=30, deadline=None)
+def test_drop_expired_exactly_the_infeasible(deadlines, min_service):
+    q = EDFQueue()
+    now = 2.5
+    for i, d in enumerate(deadlines):
+        q.push(Query(deadline=d, seq=0, arrival=0.0, qid=i))
+    dropped = q.drop_expired(now, min_service)
+    assert all(d.deadline - now < min_service for d in dropped)
+    assert all(not d2.dropped for d2 in []) or True
+    rest = [q.pop() for _ in range(len(q))]
+    assert all(r.deadline - now >= min_service for r in rest)
+    assert len(dropped) + len(rest) == len(deadlines)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 8),
+       st.sampled_from(["slackfit", "maxbatch", "infaas"]))
+@settings(max_examples=20, deadline=None)
+def test_simulator_conserves_queries(seed, workers, polname):
+    """Every query ends in exactly one of {served, dropped, unfinished}
+    and the counts add up — across policies, seeds, pool sizes."""
+    rng = np.random.default_rng(seed)
+    arr = np.sort(rng.uniform(0, 0.5, size=rng.integers(1, 120)))
+    pol = policies.ALL_POLICIES[polname]()
+    res = simulator.simulate(arr, PROF, pol,
+                             simulator.SimConfig(n_workers=workers, seed=seed))
+    assert len(res.queries) == len(arr)
+    served = sum(1 for q in res.queries
+                 if q.finish is not None and not q.dropped)
+    dropped = sum(1 for q in res.queries if q.dropped)
+    unfinished = sum(1 for q in res.queries
+                     if q.finish is None and not q.dropped)
+    assert served + dropped + unfinished == len(arr)
+    assert unfinished == 0                       # no faults -> all resolve
+    # dispatched batch sizes never exceed what the queue could supply
+    assert all(d.batch >= 1 for d in res.dispatches)

@@ -1,0 +1,82 @@
+"""HLO collective parser + roofline term model."""
+import numpy as np
+import pytest
+
+from repro.roofline import hlo, hw
+from repro.roofline.report import RooflineTerms
+
+SAMPLE_HLO = """
+ENTRY %main {
+  %p0 = f32[64,512]{1,0} parameter(0)
+  %ar = f32[64,512]{1,0} all-reduce(f32[64,512]{1,0} %p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[128,256]{1,0} all-gather(bf16[32,256]{1,0} %x), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = f32[16,512]{1,0} reduce-scatter(f32[64,512]{1,0} %y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = f32[8,8]{1,0} collective-permute(f32[8,8]{1,0} %z), source_target_pairs={{0,1}}
+  %dot = f32[64,64]{1,0} dot(%p0, %p0)
+}
+"""
+
+
+class TestCollectiveParser:
+    def test_counts(self):
+        c = hlo.collective_count(SAMPLE_HLO)
+        assert c == {"all-reduce": 1, "all-gather": 1, "reduce-scatter": 1,
+                     "collective-permute": 1}
+
+    def test_bytes_model(self):
+        total, kinds = hlo.collective_bytes(SAMPLE_HLO)
+        ar = 2 * (64 * 512 * 4) * 3 / 4
+        ag = (128 * 256 * 2) * 3 / 4
+        rs = (16 * 512 * 4) * 3
+        cp = 8 * 8 * 4
+        assert kinds["all-reduce"] == pytest.approx(ar)
+        assert kinds["all-gather"] == pytest.approx(ag)
+        assert kinds["reduce-scatter"] == pytest.approx(rs)
+        assert kinds["collective-permute"] == pytest.approx(cp)
+        assert total == pytest.approx(ar + ag + rs + cp)
+
+    def test_async_pairs_counted_once(self):
+        text = """
+  %s = f32[64,64]{1,0} all-gather-start(f32[16,64]{1,0} %x), replica_groups={{0,1,2,3}}
+  %d = f32[64,64]{1,0} all-gather-done(f32[64,64]{1,0} %s)
+"""
+        total, kinds = hlo.collective_bytes(text)
+        assert kinds == {"all-gather": pytest.approx(64 * 64 * 4 * 3 / 4)}
+
+    def test_no_collectives(self):
+        total, kinds = hlo.collective_bytes("%dot = f32[4,4]{1,0} dot(%a, %b)")
+        assert total == 0 and kinds == {}
+
+
+class TestRooflineTerms:
+    def _terms(self, **kw):
+        base = dict(arch="a", shape="s", mesh="single", chips=256,
+                    hlo_flops_per_device=1e12, hlo_bytes_per_device=1e9,
+                    collective_bytes_per_device=1e8, model_flops_total=2e14)
+        base.update(kw)
+        return RooflineTerms(**base)
+
+    def test_three_terms(self):
+        t = self._terms()
+        assert t.t_compute == pytest.approx(1e12 / hw.PEAK_FLOPS_BF16)
+        assert t.t_memory == pytest.approx(1e9 / hw.HBM_BW)
+        assert t.t_collective == pytest.approx(1e8 / hw.ICI_BW_PER_LINK)
+
+    def test_dominant(self):
+        assert self._terms(hlo_flops_per_device=1e15).dominant == "compute"
+        assert self._terms(hlo_bytes_per_device=1e12).dominant == "memory"
+        assert self._terms(collective_bytes_per_device=1e12).dominant == \
+            "collective"
+
+    def test_useful_ratio(self):
+        t = self._terms(model_flops_total=256e12, hlo_flops_per_device=2e12)
+        assert t.useful_flops_ratio == pytest.approx(0.5)
+
+    def test_roofline_fraction_bounds(self):
+        t = self._terms()
+        assert 0 <= t.roofline_fraction <= 1.5
+
+    def test_fits_hbm(self):
+        assert self._terms(argument_bytes_per_device=1e9,
+                           temp_bytes_per_device=1e9).fits_hbm()
+        assert not self._terms(argument_bytes_per_device=20e9).fits_hbm()

@@ -1,0 +1,93 @@
+"""Asyncio router/worker runtime hosting a real JAX supernet: SubNetAct
+actuation end-to-end, fault handling, EDF ordering."""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import subnet as sn
+from repro.core.pareto import pareto_subnets
+from repro.models import lm
+from repro.serving import policies, profiler, runtime
+from tests.conftest import tiny_dense
+
+
+@pytest.fixture(scope="module")
+def served_supernet():
+    cfg = tiny_dense(vocab_size=64)
+    params = lm.init_model(jax.random.PRNGKey(0), cfg)
+    pts = pareto_subnets(cfg)
+    ctrls = [sn.make_control(cfg, p.sub) for p in pts]
+    stacked = {k: jnp.stack([jnp.asarray(c[k]) for c in ctrls])
+               for k in ctrls[0]}
+
+    @jax.jit
+    def _step(tokens, idx):
+        ctrl = {k: v[idx] for k, v in stacked.items()}
+        return lm.prefill(params, cfg, {"tokens": tokens}, ctrl)
+
+    def step_fn(subnet_idx, batch):
+        return np.asarray(_step(batch, jnp.int32(subnet_idx)))[:, 0]
+
+    def pad(payloads):
+        return jnp.stack([jnp.asarray(p) for p in payloads])
+
+    fns = [(lambda b, i=i: step_fn(i, jnp.ones((b, 8), jnp.int32)))
+           for i in range(len(pts))]
+    prof = profiler.measure_profile(fns, [p.acc for p in pts],
+                                    batches=(1, 2, 4), n_buckets=8)
+    return cfg, step_fn, pad, prof
+
+
+def test_router_serves_all_queries(served_supernet):
+    cfg, step_fn, pad, prof = served_supernet
+
+    async def main():
+        workers = runtime.make_supernet_workers(2, step_fn, pad)
+        router = runtime.Router(prof, policies.SlackFit(), workers)
+        await router.start()
+        futs = [await router.submit(np.ones((8,), np.int32), slo_s=1.0)
+                for _ in range(20)]
+        results = await asyncio.gather(*futs)
+        await router.drain()
+        return router.stats(), results
+
+    stats, results = asyncio.run(main())
+    assert stats["served"] == 20
+    assert stats["slo_attainment"] > 0.9
+    preds, accs = zip(*results)
+    assert all(p is not None and p.shape[-1] == cfg.vocab_size for p in preds)
+
+
+def test_actuation_is_subnet_dependent(served_supernet):
+    """Different subnet indices give different predictions (the control
+    tuple actually routes)."""
+    cfg, step_fn, pad, prof = served_supernet
+    x = pad([np.ones((8,), np.int32)])
+    y0 = step_fn(0, x)
+    y1 = step_fn(prof.n_pareto - 1, x)
+    assert not np.allclose(y0, y1)
+
+
+def test_worker_fault_absorbed(served_supernet):
+    cfg, step_fn, pad, prof = served_supernet
+
+    async def main():
+        workers = runtime.make_supernet_workers(2, step_fn, pad)
+        router = runtime.Router(prof, policies.SlackFit(), workers)
+        await router.start()
+        futs = []
+        for i in range(10):
+            futs.append(await router.submit(np.ones((8,), np.int32), slo_s=2.0))
+            if i == 4:
+                router.kill_worker(0)
+            await asyncio.sleep(0.002)
+        await asyncio.gather(*futs)
+        await router.drain()
+        return router.stats()
+
+    stats = asyncio.run(main())
+    assert stats["served"] == 10
+    assert stats["slo_attainment"] > 0.8

@@ -1,0 +1,136 @@
+"""Simulator + traces + end-to-end serving behavior (paper §6 claims as
+assertions)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.serving import metrics, policies, profiler, simulator, traces
+
+CFG = get_config("ofa_resnet")
+PROF = profiler.build_profile(CFG)
+
+
+class TestTraces:
+    @given(lam=st.floats(100, 5000), cv2=st.floats(0.0, 8.0))
+    @settings(max_examples=20, deadline=None)
+    def test_bursty_trace_stats(self, lam, cv2):
+        arr = traces.bursty_trace(0.0, lam, cv2, duration=5.0, seed=1)
+        rate, _ = traces.trace_stats(arr)
+        assert abs(rate - lam) / lam < 0.35
+        assert (np.diff(arr) >= 0).all()
+
+    def test_deterministic(self):
+        a = traces.bursty_trace(100, 900, 4, 3.0, seed=7)
+        b = traces.bursty_trace(100, 900, 4, 3.0, seed=7)
+        np.testing.assert_array_equal(a, b)
+        c = traces.maf_like_trace(2000, 10.0, seed=3)
+        d = traces.maf_like_trace(2000, 10.0, seed=3)
+        np.testing.assert_array_equal(c, d)
+
+    def test_time_varying_accelerates(self):
+        arr = traces.time_varying_trace(500, 3000, 500, 1.0, 10.0, seed=0)
+        first = (arr < 2).sum() / 2
+        last = (arr > 8).sum() / 2
+        assert last > 2 * first
+
+    def test_maf_shape(self):
+        arr = traces.maf_like_trace(4000, 20.0, seed=0)
+        rate, cv2 = traces.trace_stats(arr)
+        assert abs(rate - 4000) / 4000 < 0.25     # mean preserved
+        assert cv2 > 0.8                          # at least Poisson-like
+        # windowed peaks ~ peak_factor * mean (paper's testbed shrink)
+        counts, _ = np.histogram(arr, np.arange(0, 20.5, 0.5))
+        assert counts.max() / 0.5 > 1.2 * rate    # real spikes exist
+        assert counts.max() / 0.5 < 1.8 * rate    # but normalized
+
+
+class TestSimulator:
+    def test_deterministic(self):
+        arr = traces.bursty_trace(500, 2500, 4, 3.0, seed=2)
+        cfg = simulator.SimConfig(n_workers=4, slo=0.036, straggler_prob=0.1)
+        r1 = simulator.simulate(arr, PROF, policies.SlackFit(), cfg)
+        r2 = simulator.simulate(arr, PROF, policies.SlackFit(), cfg)
+        assert r1.slo_attainment == r2.slo_attainment
+        assert r1.mean_acc == r2.mean_acc
+
+    def test_light_load_high_acc_and_slo(self):
+        arr = traces.bursty_trace(200, 800, 2, 4.0, seed=3)
+        res = simulator.simulate(arr, PROF, policies.SlackFit(),
+                                 simulator.SimConfig(n_workers=8))
+        assert res.slo_attainment > 0.999
+        assert res.mean_acc > 79.0
+
+    def test_accuracy_degrades_with_load(self):
+        accs = []
+        for lam in (1000, 4000, 7000):
+            arr = traces.bursty_trace(lam * 0.2, lam * 0.8, 4, 4.0, seed=4)
+            res = simulator.simulate(arr, PROF, policies.SlackFit(),
+                                     simulator.SimConfig(n_workers=8))
+            assert res.slo_attainment > 0.99
+            accs.append(res.mean_acc)
+        assert accs[0] > accs[1] > accs[2]
+
+    def test_slackfit_beats_baselines_tradeoff(self):
+        """Paper Fig 8/10: higher acc than INFaaS at same SLO; higher
+        SLO than fixed high-acc Clipper+."""
+        arr = traces.bursty_trace(1500, 5550, 8, 4.0, seed=5)
+        scfg = simulator.SimConfig(n_workers=8)
+        sf = simulator.simulate(arr, PROF, policies.SlackFit(), scfg)
+        inf = simulator.simulate(arr, PROF, policies.INFaaSMinCost(), scfg)
+        clip_hi = simulator.simulate(
+            arr, PROF, policies.ClipperFixed(PROF.n_pareto - 1), scfg)
+        assert sf.slo_attainment >= 0.99
+        assert sf.mean_acc > inf.mean_acc + 1.0
+        assert sf.slo_attainment > clip_hi.slo_attainment + 0.5
+
+    def test_fault_tolerance_graceful_degradation(self):
+        """Paper Fig 11a: workers die, accuracy actuates down, SLO holds."""
+        arr = traces.bursty_trace(700, 2800, 2, 24.0, seed=6)
+        scfg = simulator.SimConfig(
+            n_workers=8, fault_times={7: 6.0, 6: 12.0, 5: 18.0})
+        res = simulator.simulate(arr, PROF, policies.SlackFit(), scfg)
+        assert res.slo_attainment > 0.995
+        s = res.series(6.0)
+        acc_before, acc_after = s[0, 3], s[3, 3]
+        assert acc_after < acc_before          # actuated down to absorb loss
+
+    def test_fault_reenqueues_inflight(self):
+        arr = np.array([0.0, 0.001, 0.002])
+        scfg = simulator.SimConfig(n_workers=1, slo=0.5,
+                                   fault_times={0: 0.004})
+        res = simulator.simulate(arr, PROF, policies.SlackFit(), scfg)
+        # with the only worker dead, queries never complete but are
+        # accounted (not lost silently)
+        assert len(res.queries) == 3
+        assert res.slo_attainment == 0.0
+
+    def test_straggler_hedging_improves_slo(self):
+        arr = traces.bursty_trace(500, 2000, 2, 4.0, seed=8)
+        base = simulator.SimConfig(n_workers=8, straggler_prob=0.08,
+                                   straggler_factor=6.0, hedging=False, seed=1)
+        hedge = simulator.SimConfig(n_workers=8, straggler_prob=0.08,
+                                    straggler_factor=6.0, hedging=True, seed=1)
+        r0 = simulator.simulate(arr, PROF, policies.SlackFit(), base)
+        r1 = simulator.simulate(arr, PROF, policies.SlackFit(), hedge)
+        assert r1.slo_attainment >= r0.slo_attainment
+
+    def test_model_switch_loading_hurts(self):
+        """Paper Fig 1b/5b: paying weight-loading on every model change
+        (Clipper-style switching) collapses SLO vs SubNetAct."""
+        arr = traces.bursty_trace(1000, 3000, 4, 4.0, seed=9)
+        fast = simulator.SimConfig(n_workers=8)
+        slow = simulator.SimConfig(n_workers=8, load_on_switch=True)
+        r_act = simulator.simulate(arr, PROF, policies.SlackFit(), fast)
+        r_load = simulator.simulate(arr, PROF, policies.SlackFit(), slow)
+        assert r_act.slo_attainment > r_load.slo_attainment
+
+
+class TestMetrics:
+    def test_slo_attainment_counts_drops_as_misses(self):
+        from repro.serving.queue import Query
+        qs = [Query(deadline=1.0, seq=0, arrival=0.0, qid=0,
+                    finish=0.5, served_acc=80.0),
+              Query(deadline=1.0, seq=1, arrival=0.0, qid=1, dropped=True)]
+        assert metrics.slo_attainment(qs) == 0.5
+        assert metrics.mean_serving_accuracy(qs) == 80.0

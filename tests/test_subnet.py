@@ -1,0 +1,107 @@
+"""Control space Phi: enumeration, control lowering, analytic
+FLOPs/params, host-side vs in-jit control sampling consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, assigned_archs
+from repro.core import subnet as sn
+from tests.conftest import tiny_dense
+
+
+class TestEnumeration:
+    def test_space_size_matches_spec(self):
+        cfg = tiny_dense()
+        assert len(sn.enumerate_space(cfg)) == cfg.elastic.num_subnets
+
+    def test_subnet_ids_are_dense_and_ordered(self):
+        cfg = tiny_dense()
+        ids = [s.subnet_id for s in sn.enumerate_space(cfg)]
+        assert ids == list(range(len(ids)))
+
+    def test_max_min(self):
+        cfg = tiny_dense()
+        mx, mn = sn.max_subnet(cfg), sn.min_subnet(cfg)
+        assert mx.depth_frac == 1.0 and mx.ffn_frac == 1.0
+        assert mn.depth_frac == min(cfg.elastic.depth_fracs)
+
+
+class TestControlLowering:
+    def test_gates_keep_early_layers(self):
+        cfg = tiny_dense()
+        g = sn.stage_gates(cfg, 2 / 3)
+        np.testing.assert_array_equal(g, [True, True, False])
+
+    def test_full_depth_all_live(self):
+        cfg = tiny_dense()
+        assert sn.stage_gates(cfg, 1.0).all()
+
+    def test_head_width_rounds_to_gqa_groups(self):
+        cfg = tiny_dense()          # 4 heads, kv=2 -> group=2
+        assert sn.active_heads(cfg, 0.5) == 2
+        assert sn.active_heads(cfg, 1.0) == 4
+
+    def test_ffn_width_aligned(self):
+        for arch in assigned_archs():
+            cfg = get_config(arch)
+            for f in cfg.elastic.ffn_fracs:
+                if cfg.d_ff:
+                    assert sn.active_ffn(cfg, f) % 128 == 0
+
+    def test_sampled_control_matches_host_control(self):
+        """sample_control_jax must agree with make_control for the
+        subnet it lands on (same subnet_id => same widths/gates)."""
+        cfg = tiny_dense()
+        space = sn.enumerate_space(cfg)
+        for seed in range(8):
+            ctrl = jax.jit(lambda k: sn.sample_control_jax(cfg, k))(
+                jax.random.PRNGKey(seed))
+            sid = int(ctrl["subnet_id"])
+            host = sn.make_control(cfg, space[sid])
+            np.testing.assert_array_equal(np.asarray(ctrl["layer_gate"]),
+                                          host["layer_gate"])
+            assert int(ctrl["head_width"]) == int(host["head_width"])
+            assert int(ctrl["ffn_bucket"]) == int(host["ffn_bucket"])
+
+
+class TestAnalytics:
+    @pytest.mark.parametrize("arch", assigned_archs())
+    def test_flops_monotone_in_depth(self, arch):
+        cfg = get_config(arch)
+        space = sn.enumerate_space(cfg)
+        by_depth = {}
+        for s in space:
+            if (s.ffn_frac, s.head_frac, s.topk) == (1.0, 1.0, space[-1].topk):
+                by_depth[s.depth_frac] = sn.flops_per_token(cfg, s)
+        ds = sorted(by_depth)
+        assert all(by_depth[a] <= by_depth[b]
+                   for a, b in zip(ds, ds[1:]))
+
+    @pytest.mark.parametrize("arch", assigned_archs())
+    def test_resident_params_ge_extracted(self, arch):
+        cfg = get_config(arch)
+        mn = sn.min_subnet(cfg)
+        assert sn.count_params(cfg, mn, resident=True) >= \
+            sn.count_params(cfg, mn, resident=False)
+
+    def test_moe_flops_track_topk(self):
+        cfg = get_config("mixtral-8x7b")
+        space = sn.enumerate_space(cfg)
+        full = [s for s in space
+                if (s.depth_frac, s.ffn_frac, s.head_frac) == (1.0, 1.0, 1.0)]
+        f = {s.topk: sn.flops_per_token(cfg, s) for s in full}
+        assert f[1] < f[2]
+
+
+@given(frac=st.floats(0.1, 1.0), repeat=st.integers(1, 32))
+@settings(max_examples=50, deadline=None)
+def test_stage_gates_property(frac, repeat):
+    """Gates: prefix-true, >=1 live, count == ceil(frac*repeat)."""
+    from repro.configs.base import Stage
+    cfg = tiny_dense(stages=(Stage(("attn", "mlp"), repeat=repeat),))
+    g = sn.stage_gates(cfg, frac)
+    n = int(g.sum())
+    assert n == max(1, int(np.ceil(repeat * frac)))
+    assert g[:n].all() and not g[n:].any()
