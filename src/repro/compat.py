@@ -1,0 +1,323 @@
+"""Version-adaptive JAX/Pallas compatibility shim.
+
+Every JAX API whose surface has moved across the versions this repo
+supports (0.4.3x .. 0.5+) is feature-probed here ONCE, at import, and
+exposed behind a stable name. Nothing outside this module may touch
+``pltpu.TPUCompilerParams`` / ``pltpu.CompilerParams``,
+``jax.sharding.AxisType``, or the ``AbstractMesh`` constructor
+directly — the probe results below are the single source of truth.
+
+Probed surfaces
+---------------
+* Pallas TPU compiler params:  ``TPUCompilerParams`` (<= 0.4.x) vs
+  ``CompilerParams`` (newer releases renamed it).
+* ``jax.sharding.AbstractMesh``: pair signature
+  ``AbstractMesh(((name, size), ...))`` (0.4.37) vs the split
+  ``AbstractMesh(shape, axes)`` form of newer releases.
+* ``jax.make_mesh``: the ``axis_types=`` kwarg and the
+  ``jax.sharding.AxisType`` enum only exist on newer releases.
+* Backend capability: whether a TPU backend is attached, and whether
+  Pallas interpret mode actually executes on this host (probed by
+  running a one-element kernel, not by guessing from the version).
+
+Kernel dispatch tiers
+---------------------
+The Pallas kernels run through a three-tier fallback chain, resolved
+once per process (see :mod:`repro.kernels.dispatch`):
+
+    ``tpu``       — compiled Pallas kernels on a real TPU backend
+    ``interpret`` — the same kernels under the Pallas interpreter
+                    (CPU CI: validates kernel numerics without a TPU)
+    ``ref``       — the pure-jnp oracles in :mod:`repro.kernels.ref`
+
+Override with ``REPRO_KERNEL_TIER=tpu|interpret|ref`` or
+:func:`set_kernel_tier`.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+__all__ = [
+    "JAX_VERSION",
+    "HAS_PALLAS",
+    "HAS_PALLAS_TPU",
+    "KERNEL_TIERS",
+    "backend",
+    "is_tpu_backend",
+    "tpu_compiler_params",
+    "compiler_params_kwargs",
+    "make_abstract_mesh",
+    "make_mesh",
+    "cost_analysis",
+    "pallas_interpret_works",
+    "cpu_subprocess_env",
+    "tier_available",
+    "kernel_tier",
+    "explicit_kernel_tier",
+    "set_kernel_tier",
+    "reset_kernel_tier",
+]
+
+
+def _version_tuple(v: str) -> Tuple[int, ...]:
+    parts = []
+    for p in v.split(".")[:3]:
+        digits = "".join(ch for ch in p if ch.isdigit())
+        parts.append(int(digits) if digits else 0)
+    return tuple(parts)
+
+
+JAX_VERSION: Tuple[int, ...] = _version_tuple(jax.__version__)
+
+
+# --------------------------------------------------------------------------
+# Pallas import probes
+# --------------------------------------------------------------------------
+
+try:
+    from jax.experimental import pallas as _pl  # noqa: F401
+    HAS_PALLAS = True
+except Exception:  # pragma: no cover - pallas always present in-tree
+    _pl = None
+    HAS_PALLAS = False
+
+try:
+    from jax.experimental.pallas import tpu as _pltpu
+    HAS_PALLAS_TPU = True
+except Exception:  # pragma: no cover
+    _pltpu = None
+    HAS_PALLAS_TPU = False
+
+# The compiler-params dataclass was renamed TPUCompilerParams ->
+# CompilerParams across Pallas releases; accept either.
+_COMPILER_PARAMS_CLS = None
+if HAS_PALLAS_TPU:
+    for _name in ("TPUCompilerParams", "CompilerParams"):
+        _COMPILER_PARAMS_CLS = getattr(_pltpu, _name, None)
+        if _COMPILER_PARAMS_CLS is not None:
+            break
+
+
+def tpu_compiler_params(**kwargs):
+    """Instance of whichever Pallas-TPU compiler-params class exists.
+
+    Returns None when no class is available (or none of the requested
+    fields are supported) — callers splat :func:`compiler_params_kwargs`
+    into ``pl.pallas_call`` so the argument vanishes entirely in that
+    case.
+    """
+    if _COMPILER_PARAMS_CLS is None:
+        return None
+    fields = getattr(_COMPILER_PARAMS_CLS, "__dataclass_fields__", None)
+    if fields is not None:
+        kwargs = {k: v for k, v in kwargs.items() if k in fields}
+        if not kwargs:
+            return None
+    try:
+        return _COMPILER_PARAMS_CLS(**kwargs)
+    except TypeError:
+        return None
+
+
+def compiler_params_kwargs(**kwargs) -> dict:
+    """``{"compiler_params": ...}`` for pallas_call, or ``{}``."""
+    params = tpu_compiler_params(**kwargs)
+    return {"compiler_params": params} if params is not None else {}
+
+
+# --------------------------------------------------------------------------
+# Mesh construction
+# --------------------------------------------------------------------------
+
+
+def make_abstract_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """``jax.sharding.AbstractMesh`` across both constructor signatures.
+
+    jax 0.4.37 takes one ``((name, size), ...)`` pair tuple; newer
+    releases take ``(axis_sizes, axis_names)`` split positionally.
+    """
+    from jax.sharding import AbstractMesh
+    pairs = tuple(zip(tuple(axes), tuple(shape)))
+    try:
+        return AbstractMesh(pairs)
+    except (TypeError, ValueError):
+        return AbstractMesh(tuple(shape), tuple(axes))
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], *, devices=None):
+    """``jax.make_mesh`` with auto axis types where the API supports it.
+
+    ``axis_types=`` (and ``jax.sharding.AxisType``) only exist on newer
+    releases; on 0.4.37 the plain call already yields Auto axes.
+    """
+    shape, axes = tuple(shape), tuple(axes)
+    kwargs = {} if devices is None else {"devices": devices}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                shape, axes,
+                axis_types=(axis_type.Auto,) * len(axes), **kwargs)
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
+def cost_analysis(compiled) -> dict:
+    """Flat dict from ``compiled.cost_analysis()`` across versions.
+
+    jax 0.4.3x returns a one-element list of dicts (per executable);
+    newer releases return the dict directly; either may be empty/None.
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)
+
+
+# --------------------------------------------------------------------------
+# Backend capability + kernel tier resolution
+# --------------------------------------------------------------------------
+
+KERNEL_TIERS = ("tpu", "interpret", "ref")
+_TIER_ENV = "REPRO_KERNEL_TIER"
+_tier_cache: Optional[str] = None
+_explicit_tier: Optional[str] = None
+_interpret_probe: Optional[bool] = None
+
+
+def backend() -> str:
+    return jax.default_backend()
+
+
+def cpu_subprocess_env(**extra) -> dict:
+    """Minimal env for spawning a CPU-pinned python subprocess.
+
+    Tests that force ``--xla_force_host_platform_device_count`` are
+    CPU-only by construction; without ``JAX_PLATFORMS=cpu`` a host with
+    a TPU wheel installed (but no TPU attached) stalls for minutes in
+    libtpu's GCP-metadata retry loop before falling back.
+    """
+    env = {
+        "PYTHONPATH": "src",
+        "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+        "HOME": os.environ.get("HOME", "/root"),
+        "JAX_PLATFORMS": "cpu",
+    }
+    env.update(extra)
+    return env
+
+
+def is_tpu_backend() -> bool:
+    return backend() == "tpu"
+
+
+def pallas_interpret_works() -> bool:
+    """Probe (once) whether Pallas interpret mode runs on this host.
+
+    An actual one-element kernel execution, not a version check: the
+    interpreter's own API surface has shifted between releases, and the
+    only trustworthy signal is a successful round trip.
+    """
+    global _interpret_probe
+    if _interpret_probe is not None:
+        return _interpret_probe
+    if not HAS_PALLAS:
+        _interpret_probe = False
+        return False
+    try:
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _copy(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        # The first resolution may happen while tracing a model step;
+        # the probe must execute eagerly regardless, or the bool()
+        # below sees a tracer and misreports the tier as unavailable.
+        with jax.ensure_compile_time_eval():
+            x = jnp.ones((8, 128), jnp.float32)
+            y = pl.pallas_call(
+                _copy, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+                interpret=True)(x)
+            _interpret_probe = bool((y == x).all())
+    except Exception:
+        _interpret_probe = False
+    return _interpret_probe
+
+
+def tier_available(tier: str) -> bool:
+    """Whether a dispatch tier can actually execute on this host."""
+    if tier == "tpu":
+        return HAS_PALLAS_TPU and is_tpu_backend()
+    if tier == "interpret":
+        # the interpret-tier kernels use pltpu grid specs, so the plain
+        # pallas probe alone is not sufficient
+        return HAS_PALLAS_TPU and pallas_interpret_works()
+    return tier == "ref"
+
+
+def _env_tier() -> Optional[str]:
+    env = os.environ.get(_TIER_ENV, "").strip().lower()
+    if not env:
+        return None
+    if env not in KERNEL_TIERS:
+        raise ValueError(
+            f"{_TIER_ENV}={env!r}: expected one of {KERNEL_TIERS}")
+    if not tier_available(env):
+        raise RuntimeError(
+            f"{_TIER_ENV}={env!r} requested but that tier is not "
+            f"available on this host (backend={backend()!r})")
+    return env
+
+
+def _resolve_tier() -> str:
+    env = _env_tier()
+    if env is not None:
+        return env
+    for tier in KERNEL_TIERS:
+        if tier_available(tier):
+            return tier
+    return "ref"
+
+
+def kernel_tier() -> str:
+    """The process-wide kernel dispatch tier, resolved once."""
+    global _tier_cache
+    if _tier_cache is None:
+        _tier_cache = _resolve_tier()
+    return _tier_cache
+
+
+def explicit_kernel_tier() -> Optional[str]:
+    """The tier the operator *asked* for (env var or set_kernel_tier),
+    or None when the process tier is purely probed. Model hot paths use
+    this to honor a forced tier while defaulting interpret-capable CPU
+    hosts to the fast pure-JAX path."""
+    if _explicit_tier is not None:
+        return _explicit_tier
+    return _env_tier()
+
+
+def set_kernel_tier(tier: str) -> str:
+    """Config override of the process tier (validated). Returns it."""
+    global _tier_cache, _explicit_tier
+    if tier not in KERNEL_TIERS:
+        raise ValueError(f"unknown kernel tier {tier!r}; "
+                         f"expected one of {KERNEL_TIERS}")
+    if not tier_available(tier):
+        raise RuntimeError(f"kernel tier {tier!r} unavailable on this host "
+                           f"(backend={backend()!r})")
+    _tier_cache = _explicit_tier = tier
+    return tier
+
+
+def reset_kernel_tier() -> None:
+    """Drop the cached/explicit tier (re-resolves on next use)."""
+    global _tier_cache, _explicit_tier
+    _tier_cache = _explicit_tier = None

@@ -55,7 +55,16 @@ def subnet_norm(x, gamma_table, subnet_id, *, beta_table=None, eps: float = 1e-5
     ``gamma_table``: (n_subnets, d) — the non-shared bookkeeping that is
     ~500x smaller than the shared weights (paper Fig. 4). ``subnet_id``
     is a traced int32 scalar: the gather is the whole actuation cost.
+
+    The plain RMS flavor routes through the kernel dispatcher: on TPU
+    (or an explicitly forced tier) the Pallas SubnetNorm kernel runs;
+    otherwise the XLA path below.
     """
+    if kind == "rmsnorm" and beta_table is None:
+        from repro.kernels import ops as kops
+        y = kops.model_subnet_rmsnorm(x, gamma_table, subnet_id, eps=eps)
+        if y is not None:
+            return y
     gamma = jnp.take(gamma_table, subnet_id, axis=0)
     xf = x.astype(jnp.float32)
     if kind == "rmsnorm":

@@ -16,7 +16,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeSpec
 
@@ -35,7 +35,9 @@ def _path_str(path) -> str:
 
 @dataclass
 class ShardingPlan:
-    mesh: Mesh
+    # Mesh or AbstractMesh: rule evaluation only reads shape/axis_names,
+    # so plans can be built (and unit-tested) without any devices.
+    mesh: Any
     cfg: ArchConfig
     # 2D expert sharding (EP over model x FFN over data). Decode-only:
     # per-step activations are tiny, so the extra gather/reduce-scatter
@@ -49,6 +51,16 @@ class ShardingPlan:
     # the previous layer's compute). For models whose TP-sharded weights
     # alone exceed HBM (llama4 train: 46 GB/device).
     fsdp: bool = False
+
+    @classmethod
+    def abstract(cls, shape: Tuple[int, ...], axes: Tuple[str, ...],
+                 cfg: ArchConfig, **kwargs) -> "ShardingPlan":
+        """Plan over a device-free AbstractMesh (rule tests, planning
+        tools on hosts without the target topology). Constructed via
+        the compat shim — the AbstractMesh constructor signature moved
+        across JAX versions."""
+        from repro import compat
+        return cls(compat.make_abstract_mesh(shape, axes), cfg, **kwargs)
 
     # ---- axis helpers -------------------------------------------------
     @property

@@ -17,6 +17,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -108,7 +110,7 @@ def decode_attention(q, k_cache, v_cache, index, *, window: int = 0,
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, d), v_cache.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        **compat.compiler_params_kwargs(
             dimension_semantics=("parallel", "arbitrary")),
     )(idx, q3, k_cache, v_cache)
     return out.reshape(B, Hq, 1, d)

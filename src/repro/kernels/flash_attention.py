@@ -21,6 +21,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -120,7 +122,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hq, Sqp, d), v.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        **compat.compiler_params_kwargs(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(lens, q, k, v)
     return out[:, :, :Sq]

@@ -1,52 +1,172 @@
-"""Backend dispatch for the Pallas kernels.
+"""Public kernel entry points, routed through the three-tier dispatcher.
 
-On TPU the real kernels run; everywhere else (this CPU container, unit
-tests) they execute in Pallas interpret mode or fall back to the
-pure-jnp reference — same semantics either way, asserted by the kernel
-sweep tests.
+Every kernel resolves to one of the tiers registered in
+:mod:`repro.kernels.dispatch` — ``tpu`` (compiled Pallas), ``interpret``
+(Pallas interpreter; CPU numerics validation), ``ref`` (pure-jnp oracle
+from :mod:`repro.kernels.ref`). The process default comes from
+:func:`repro.compat.kernel_tier`; per-call overrides take ``tier=`` (or
+the legacy ``interpret=`` bool, mapped to ``interpret``/``tpu``).
+
+The Pallas implementations are only imported when the Pallas TPU module
+itself imports — on a JAX build without it, every kernel still works at
+the ``ref`` tier.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-
+from repro import compat
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention as _decode_pallas
-from repro.kernels.flash_attention import flash_attention as _flash_pallas
-from repro.kernels.sliced_matmul import sliced_matmul as _sliced_pallas
-from repro.kernels.subnet_rmsnorm import subnet_rmsnorm as _rmsnorm_pallas
+from repro.kernels.dispatch import (DISPATCHER, coerce_tier, model_tier,
+                                    register)
+
+if compat.HAS_PALLAS_TPU:
+    from repro.kernels.decode_attention import decode_attention as _decode_pallas
+    from repro.kernels.flash_attention import flash_attention as _flash_pallas
+    from repro.kernels.sliced_matmul import sliced_matmul as _sliced_pallas
+    from repro.kernels.subnet_rmsnorm import subnet_rmsnorm as _rmsnorm_pallas
+
+    @register("flash_attention", "tpu")
+    def _flash_tpu(q, k, v, *, causal, window, kv_len, q_block, kv_block):
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             kv_len=kv_len, q_block=q_block,
+                             kv_block=kv_block, interpret=False)
+
+    @register("flash_attention", "interpret")
+    def _flash_interpret(q, k, v, *, causal, window, kv_len, q_block, kv_block):
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             kv_len=kv_len, q_block=q_block,
+                             kv_block=kv_block, interpret=True)
+
+    @register("decode_attention", "tpu")
+    def _decode_tpu(q, k_cache, v_cache, index, *, window, kv_block):
+        return _decode_pallas(q, k_cache, v_cache, index, window=window,
+                              kv_block=kv_block, interpret=False)
+
+    @register("decode_attention", "interpret")
+    def _decode_interpret(q, k_cache, v_cache, index, *, window, kv_block):
+        return _decode_pallas(q, k_cache, v_cache, index, window=window,
+                              kv_block=kv_block, interpret=True)
+
+    @register("sliced_matmul", "tpu")
+    def _sliced_tpu(x, w, active_in, active_out, *, bm, bk, bn):
+        return _sliced_pallas(x, w, active_in, active_out, bm=bm, bk=bk,
+                              bn=bn, interpret=False)
+
+    @register("sliced_matmul", "interpret")
+    def _sliced_interpret(x, w, active_in, active_out, *, bm, bk, bn):
+        return _sliced_pallas(x, w, active_in, active_out, bm=bm, bk=bk,
+                              bn=bn, interpret=True)
+
+    @register("subnet_rmsnorm", "tpu")
+    def _rmsnorm_tpu(x, gamma_table, subnet_id, *, eps):
+        return _rmsnorm_pallas(x, gamma_table, subnet_id, eps=eps,
+                               interpret=False)
+
+    @register("subnet_rmsnorm", "interpret")
+    def _rmsnorm_interpret(x, gamma_table, subnet_id, *, eps):
+        return _rmsnorm_pallas(x, gamma_table, subnet_id, eps=eps,
+                               interpret=True)
 
 
-@functools.lru_cache(maxsize=1)
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+@register("flash_attention", "ref")
+def _flash_ref(q, k, v, *, causal, window, kv_len, q_block=0, kv_block=0):
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   kv_len=kv_len)
+
+
+@register("decode_attention", "ref")
+def _decode_ref(q, k_cache, v_cache, index, *, window, kv_block=0):
+    return ref.decode_attention_ref(q, k_cache, v_cache, index, window=window)
+
+
+@register("sliced_matmul", "ref")
+def _sliced_ref(x, w, active_in, active_out, *, bm=0, bk=0, bn=0):
+    orig_shape = x.shape
+    y = ref.sliced_matmul_ref(x.reshape(-1, x.shape[-1]), w,
+                              active_in, active_out)
+    return y.reshape(*orig_shape[:-1], w.shape[1])
+
+
+@register("subnet_rmsnorm", "ref")
+def _rmsnorm_ref(x, gamma_table, subnet_id, *, eps):
+    return ref.subnet_rmsnorm_ref(x, gamma_table, subnet_id, eps=eps)
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, kv_len=None,
-                    q_block=256, kv_block=256, interpret=None):
-    interp = (not on_tpu()) if interpret is None else interpret
-    return _flash_pallas(q, k, v, causal=causal, window=window, kv_len=kv_len,
-                         q_block=q_block, kv_block=kv_block, interpret=interp)
+                    q_block=256, kv_block=256, tier=None, interpret=None):
+    return DISPATCHER.call(
+        "flash_attention", q, k, v, causal=causal, window=window,
+        kv_len=kv_len, q_block=q_block, kv_block=kv_block,
+        tier=coerce_tier(tier, interpret))
 
 
 def decode_attention(q, k_cache, v_cache, index, *, window=0, kv_block=256,
-                     interpret=None):
-    interp = (not on_tpu()) if interpret is None else interpret
-    return _decode_pallas(q, k_cache, v_cache, index, window=window,
-                          kv_block=kv_block, interpret=interp)
+                     tier=None, interpret=None):
+    return DISPATCHER.call(
+        "decode_attention", q, k_cache, v_cache, index, window=window,
+        kv_block=kv_block, tier=coerce_tier(tier, interpret))
 
 
 def sliced_matmul(x, w, active_in, active_out, *, bm=128, bk=128, bn=128,
-                  interpret=None):
-    interp = (not on_tpu()) if interpret is None else interpret
-    return _sliced_pallas(x, w, active_in, active_out, bm=bm, bk=bk, bn=bn,
-                          interpret=interp)
+                  tier=None, interpret=None):
+    return DISPATCHER.call(
+        "sliced_matmul", x, w, active_in, active_out, bm=bm, bk=bk, bn=bn,
+        tier=coerce_tier(tier, interpret))
 
 
-def subnet_rmsnorm(x, gamma_table, subnet_id, *, eps=1e-5, interpret=None):
-    interp = (not on_tpu()) if interpret is None else interpret
-    return _rmsnorm_pallas(x, gamma_table, subnet_id, eps=eps, interpret=interp)
+def subnet_rmsnorm(x, gamma_table, subnet_id, *, eps=1e-5, tier=None,
+                   interpret=None):
+    return DISPATCHER.call(
+        "subnet_rmsnorm", x, gamma_table, subnet_id, eps=eps,
+        tier=coerce_tier(tier, interpret))
+
+
+# --------------------------------------------------------------------------
+# model-grade impls (the wiring used by models/attention + backbone)
+# --------------------------------------------------------------------------
+
+
+def model_flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                          kv_len=None, q_block=512, kv_block=512, scale=None):
+    """Full-sequence attention for model forward passes.
+
+    Pallas kernel when the model tier says so; the blockwise-scan XLA
+    path from :mod:`repro.models.attention` otherwise (same math,
+    asserted equal by the kernel tests). The Pallas kernel does not
+    take ``q_offset``/``scale`` — calls using them route to the XLA
+    path on every tier rather than silently dropping the arguments.
+    """
+    tier = model_tier()
+    pallas_ok = isinstance(q_offset, int) and q_offset == 0 and scale is None
+    if pallas_ok and tier in ("tpu", "interpret"):
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               kv_len=kv_len, tier=tier)
+    from repro.models.attention import flash_attention as xla_flash
+    return xla_flash(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                     kv_len=kv_len, q_block=q_block, kv_block=kv_block,
+                     scale=scale)
+
+
+def model_decode_attention(q, k_cache, v_cache, *, index, window=0):
+    """Single-token cached decode for model decode steps."""
+    tier = model_tier()
+    if tier in ("tpu", "interpret"):
+        return decode_attention(q, k_cache, v_cache, index, window=window,
+                                tier=tier)
+    from repro.models.attention import decode_attention as xla_decode
+    return xla_decode(q, k_cache, v_cache, index=index, window=window)
+
+
+def model_subnet_rmsnorm(x, gamma_table, subnet_id, *, eps=1e-5):
+    """SubnetNorm (RMS flavor) for model blocks; None = use XLA path."""
+    tier = model_tier()
+    if tier in ("tpu", "interpret"):
+        return subnet_rmsnorm(x, gamma_table, subnet_id, eps=eps, tier=tier)
+    return None
 
 
 # references re-exported for tests

@@ -20,6 +20,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _kernel(nact_ref, x_ref, w_ref, o_ref, acc_ref, *, bk: int, nk: int):
     """Grid: (m, n, k). nact_ref holds (k_blocks_active, n_blocks_active)."""
@@ -96,7 +98,7 @@ def sliced_matmul(x, w, active_in, active_out, *, bm: int = 128, bk: int = 128,
         ),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        **compat.compiler_params_kwargs(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(nact, x2, wp)
     out = out[:M, :N]

@@ -23,6 +23,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import SHAPES, get_config, assigned_archs, shape_applicable
 from repro.core import subnet as sn
 from repro.distributed.sharding import ShardingPlan
@@ -192,7 +193,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         t_compile = time.time() - t0 - t_lower
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis(compiled)
     text = compiled.as_text()
     coll_bytes, breakdown = hlo_mod.collective_bytes(text)
     counts = hlo_mod.collective_count(text)
@@ -209,8 +210,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         temp_bytes_per_device=float(ma.temp_size_in_bytes),
         collective_breakdown=breakdown,
     )
+    from repro.kernels.dispatch import model_tier
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
-           "status": "ok", "remat": remat, "microbatch": microbatch,
+           "status": "ok", "kernel_tier": model_tier(),
+           "remat": remat, "microbatch": microbatch,
            "int8_weights": int8_weights, "fsdp": fsdp,
            "lower_s": round(t_lower, 1),
            "compile_s": round(t_compile, 1),

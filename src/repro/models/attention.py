@@ -3,8 +3,10 @@ window, SubNetAct head elasticity, flash (blockwise online-softmax)
 prefill and cached decode.
 
 The blockwise-`lax.scan` implementation here is the XLA path (and the
-oracle); `repro.kernels.ops.flash_attention` dispatches to the Pallas
-TPU kernel when running on TPU.
+oracle). Model blocks resolve their default impl through the kernel
+dispatcher (`repro.kernels.ops.model_flash_attention` /
+`model_decode_attention`): the Pallas TPU kernels on TPU, this XLA path
+on CPU hosts — one code path, backend picked per process.
 """
 from __future__ import annotations
 
@@ -223,8 +225,15 @@ def head_mask(cfg: ArchConfig, o, head_width):
 
 
 def attention_block(p, cfg: ArchConfig, x, ctrl, positions, *,
-                    slice_mode: str = "mask", attn_impl=flash_attention):
-    """Full-sequence attention with pre-norm. x: (B,S,d) -> (B,S,d)."""
+                    slice_mode: str = "mask", attn_impl=None):
+    """Full-sequence attention with pre-norm. x: (B,S,d) -> (B,S,d).
+
+    ``attn_impl=None`` resolves through the kernel dispatcher (Pallas on
+    TPU, the XLA blockwise path otherwise); pass an impl explicitly to
+    pin a tier (tests, benchmarks).
+    """
+    if attn_impl is None:
+        from repro.kernels.ops import model_flash_attention as attn_impl
     h = ops.subnet_norm(x, p["norm_gamma"], ctrl["subnet_id"],
                         beta_table=p.get("norm_beta"), eps=cfg.norm_eps, kind=cfg.norm)
     q, k, v = _project_qkv(p, cfg, h, positions)
@@ -271,8 +280,12 @@ def attention_block(p, cfg: ArchConfig, x, ctrl, positions, *,
 
 
 def attention_decode(p, cfg: ArchConfig, x, ctrl, cache, index, *,
-                     slice_mode: str = "mask"):
-    """One-token decode. x: (B,1,d); cache: {'k','v'}: (B,Hkv,Smax,hd)."""
+                     slice_mode: str = "mask", decode_impl=None):
+    """One-token decode. x: (B,1,d); cache: {'k','v'}: (B,Hkv,Smax,hd).
+
+    ``decode_impl=None`` resolves through the kernel dispatcher."""
+    if decode_impl is None:
+        from repro.kernels.ops import model_decode_attention as decode_impl
     h = ops.subnet_norm(x, p["norm_gamma"], ctrl["subnet_id"],
                         beta_table=p.get("norm_beta"), eps=cfg.norm_eps, kind=cfg.norm)
     B = x.shape[0]
@@ -286,8 +299,8 @@ def attention_decode(p, cfg: ArchConfig, x, ctrl, cache, index, *,
                                        (0, 0, slot, 0))
     v_cache = lax.dynamic_update_slice(cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
                                        (0, 0, slot, 0))
-    o = decode_attention(q.transpose(0, 2, 1, 3), k_cache, v_cache,
-                         index=index, window=cfg.sliding_window)
+    o = decode_impl(q.transpose(0, 2, 1, 3), k_cache, v_cache,
+                    index=index, window=cfg.sliding_window)
     o = o.transpose(0, 2, 1, 3)                        # (B,1,H,hd)
     o = head_mask(cfg, o, ctrl["head_width"])
     y = o.reshape(B, 1, cfg.n_heads * hd) @ p["wo"]

@@ -34,7 +34,8 @@ def _register(kind, init, full, decode, cache_init):
 
 _register(
     "attn", attn_mod.init_attention,
-    lambda p, cfg, x, ctrl, pos, sm: attn_mod.attention_block(p, cfg, x, ctrl, pos, slice_mode=sm),
+    lambda p, cfg, x, ctrl, pos, sm, impl=None: attn_mod.attention_block(
+        p, cfg, x, ctrl, pos, slice_mode=sm, attn_impl=impl),
     lambda p, cfg, x, ctrl, cache, idx, sm: attn_mod.attention_decode(p, cfg, x, ctrl, cache, idx, slice_mode=sm),
     lambda cfg, b, s, dt: attn_mod.init_attention_cache(cfg, b, s, dt),
 )
@@ -107,8 +108,12 @@ def init_backbone(key, cfg: ArchConfig, dtype) -> Dict:
 
 def backbone_forward(params, cfg: ArchConfig, x, ctrl, positions, *,
                      slice_mode: str = "mask", remat: bool = False,
-                     moe_groups: int = 1, moe_group_axes=None):
-    """x: (B, S, d) -> (B, S, d)."""
+                     moe_groups: int = 1, moe_group_axes=None,
+                     attn_impl=None):
+    """x: (B, S, d) -> (B, S, d).
+
+    ``attn_impl=None`` lets each attention block resolve through the
+    kernel dispatcher; pass one to pin a tier end-to-end (tests)."""
     gates_all = ctrl["layer_gate"]
     offset = 0
     for si, stage in enumerate(cfg.stages):
@@ -123,6 +128,9 @@ def backbone_forward(params, cfg: ArchConfig, x, ctrl, positions, *,
                     if kind == "moe":
                         xx = fn(unit_p[_slot(j, kind)], cfg, xx, ctrl, positions,
                                 slice_mode, moe_groups, moe_group_axes)
+                    elif kind == "attn":
+                        xx = fn(unit_p[_slot(j, kind)], cfg, xx, ctrl, positions,
+                                slice_mode, attn_impl)
                     else:
                         xx = fn(unit_p[_slot(j, kind)], cfg, xx, ctrl, positions,
                                 slice_mode)
@@ -136,7 +144,7 @@ def backbone_forward(params, cfg: ArchConfig, x, ctrl, positions, *,
                 def shared_block(xx):
                     xx = attn_mod.attention_block(
                         params["shared_attn"], cfg, xx, ctrl, positions,
-                        slice_mode=slice_mode)
+                        slice_mode=slice_mode, attn_impl=attn_impl)
                     if "shared_mlp" in params:
                         xx = ffn_mod.mlp_block(params["shared_mlp"], cfg, xx,
                                                ctrl, slice_mode=slice_mode)

@@ -70,7 +70,7 @@ def sinusoid_pos(positions, d: int, dtype):
 
 
 def forward(params, cfg: ArchConfig, batch, ctrl, *, slice_mode="mask",
-            remat=False, moe_groups=1, moe_group_axes=None):
+            remat=False, moe_groups=1, moe_group_axes=None, attn_impl=None):
     x = embed_inputs(params, cfg, batch)
     B, S = x.shape[:2]
     positions = batch.get("positions")
@@ -81,7 +81,8 @@ def forward(params, cfg: ArchConfig, batch, ctrl, *, slice_mode="mask",
         x = x + sinusoid_pos(pos2d, cfg.d_model, x.dtype)
     x = bb.backbone_forward(params["backbone"], cfg, x, ctrl, positions,
                             slice_mode=slice_mode, remat=remat,
-                            moe_groups=moe_groups, moe_group_axes=moe_group_axes)
+                            moe_groups=moe_groups, moe_group_axes=moe_group_axes,
+                            attn_impl=attn_impl)
     return _head(params, cfg, x, ctrl)
 
 

@@ -27,7 +27,9 @@ from repro.serving.queue import EDFQueue, Query
 class ServedQuery:
     query: Query
     payload: Any                       # model input (e.g. token array row)
-    done: asyncio.Future = None        # resolves to (prediction, acc)
+    # resolves to (prediction, acc); created by the running loop in
+    # submit() — a Future is not a valid dataclass default value.
+    done: Optional[asyncio.Future] = field(default=None)
 
 
 @dataclass
@@ -66,7 +68,7 @@ class Router:
         now = time.perf_counter()
         q = Query(deadline=now + slo_s, seq=0, arrival=now, qid=self._qid)
         self._qid += 1
-        sq = ServedQuery(q, payload, asyncio.get_event_loop().create_future())
+        sq = ServedQuery(q, payload, asyncio.get_running_loop().create_future())
         self._payloads[q.qid] = sq
         self.edf.push(q)
         return sq.done
@@ -79,7 +81,7 @@ class Router:
                 w.alive = False
 
     async def _schedule_loop(self):
-        loop = asyncio.get_event_loop()
+        loop = asyncio.get_running_loop()
         while not self._closed:
             worker: WorkerHandle = await self._idle.get()
             if not worker.alive:

@@ -1,0 +1,85 @@
+"""Property-testing shim: real ``hypothesis`` when installed, otherwise
+a minimal deterministic fallback.
+
+The tier-1 suite must collect and pass on bare hosts (the CI container
+has no hypothesis wheel). The fallback implements the exact strategy
+surface the tests use — ``floats, integers, lists, tuples,
+sampled_from`` plus ``given``/``settings`` — drawing seeded
+pseudo-random examples (no shrinking, no edge-case database). Each test
+gets a stable per-test seed, so failures reproduce run-to-run.
+
+Install the real thing with ``pip install -r requirements-dev.txt`` to
+get shrinking and adversarial example generation.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import random
+    import types
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw          # rng -> value
+
+    def _floats(min_value: float, max_value: float, **_) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _integers(min_value: int, max_value: int, **_) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    def _lists(elements: _Strategy, *, min_size: int = 0,
+               max_size: int = 10, **_) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def _tuples(*elems: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+    strategies = types.SimpleNamespace(
+        floats=_floats, integers=_integers, lists=_lists, tuples=_tuples,
+        sampled_from=_sampled_from)
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strats: _Strategy, **kw_strats: _Strategy):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                rng = random.Random(fn.__qualname__)   # stable per test
+                for _ in range(n):
+                    drawn = [s.draw(rng) for s in arg_strats]
+                    drawn_kw = {k: s.draw(rng) for k, s in kw_strats.items()}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+
+            # Hide the strategy-supplied parameters from pytest, which
+            # would otherwise look for fixtures of the same names.
+            sig = inspect.signature(fn)
+            params = [p for p in sig.parameters.values()
+                      if p.name not in kw_strats]
+            if arg_strats:
+                params = params[:-len(arg_strats)]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+        return deco

@@ -1,0 +1,271 @@
+"""Compat shim resolution on the installed JAX + kernel dispatcher
+tiers: import sweep over every repro.* module, probe results, tier
+fallback chain, and per-kernel agreement between the fallback tiers.
+"""
+import importlib
+import os
+import pkgutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.kernels import ops, ref
+from repro.kernels.dispatch import DISPATCHER, coerce_tier, model_tier
+
+KERNELS = ("flash_attention", "decode_attention", "sliced_matmul",
+           "subnet_rmsnorm")
+
+
+# --------------------------------------------------------------------------
+# import sweep: every module must import on this JAX version
+# --------------------------------------------------------------------------
+
+
+def _all_repro_modules():
+    import repro
+    names = ["repro"]
+    for mod in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+        names.append(mod.name)
+    return names
+
+
+@pytest.mark.parametrize("name", _all_repro_modules())
+def test_module_imports(name):
+    """No repro.* module may blow up at import time on this host.
+
+    This is the canary for version drift: the seed repo failed here on
+    jax 0.4.37 (TPUCompilerParams rename, AxisType, AbstractMesh)."""
+    saved = os.environ.get("XLA_FLAGS")
+    try:
+        importlib.import_module(name)
+    finally:
+        # repro.launch.dryrun sets XLA_FLAGS at import; don't leak it
+        # into later tests' subprocess spawns.
+        if saved is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = saved
+
+
+# --------------------------------------------------------------------------
+# shim resolution on the installed version
+# --------------------------------------------------------------------------
+
+
+def test_jax_version_parsed():
+    assert compat.JAX_VERSION >= (0, 4)
+    assert compat.JAX_VERSION == compat._version_tuple(jax.__version__)
+
+
+def test_compiler_params_resolve_on_this_version():
+    """Whatever this JAX calls the class, the shim must find it."""
+    assert compat.HAS_PALLAS and compat.HAS_PALLAS_TPU
+    params = compat.tpu_compiler_params(
+        dimension_semantics=("parallel", "arbitrary"))
+    assert params is not None
+    kw = compat.compiler_params_kwargs(
+        dimension_semantics=("parallel", "arbitrary"))
+    assert set(kw) == {"compiler_params"}
+    # unknown fields are dropped, never raised
+    assert compat.tpu_compiler_params(not_a_real_field=1) is None
+
+
+def test_make_abstract_mesh_both_signatures():
+    mesh = compat.make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    assert tuple(mesh.axis_names) == ("pod", "data", "model")
+    assert dict(mesh.shape) == {"pod": 2, "data": 16, "model": 16}
+
+
+def test_make_mesh_single_device():
+    mesh = compat.make_mesh((1,), ("data",))
+    assert mesh.shape["data"] == 1
+
+
+def test_cpu_subprocess_env_pins_backend():
+    env = compat.cpu_subprocess_env(EXTRA="x")
+    assert env["JAX_PLATFORMS"] == "cpu"
+    assert env["PYTHONPATH"] == "src"
+    assert env["EXTRA"] == "x"
+
+
+# --------------------------------------------------------------------------
+# tier resolution
+# --------------------------------------------------------------------------
+
+
+def test_process_tier_valid_and_available():
+    tier = compat.kernel_tier()
+    assert tier in compat.KERNEL_TIERS
+    assert compat.tier_available(tier)
+    if not compat.is_tpu_backend():
+        assert tier != "tpu"
+
+
+def test_ref_tier_always_available():
+    assert compat.tier_available("ref")
+
+
+def test_interpret_probe_runs_here():
+    # this repo's CI floor: the Pallas interpreter must work on CPU
+    assert compat.pallas_interpret_works()
+
+
+def test_set_kernel_tier_validates():
+    with pytest.raises(ValueError):
+        compat.set_kernel_tier("gpu")
+    if not compat.is_tpu_backend():
+        with pytest.raises(RuntimeError):
+            compat.set_kernel_tier("tpu")
+
+
+def test_env_override_respected():
+    before = compat.kernel_tier()
+    saved = os.environ.get("REPRO_KERNEL_TIER")
+    os.environ["REPRO_KERNEL_TIER"] = "ref"
+    try:
+        compat.reset_kernel_tier()
+        assert compat.kernel_tier() == "ref"
+        assert compat.explicit_kernel_tier() == "ref"
+        assert model_tier() == "ref"
+    finally:
+        if saved is None:
+            os.environ.pop("REPRO_KERNEL_TIER", None)
+        else:
+            os.environ["REPRO_KERNEL_TIER"] = saved
+        compat.reset_kernel_tier()
+    assert compat.kernel_tier() == before
+
+
+def test_set_kernel_tier_roundtrip():
+    before = compat.kernel_tier()
+    try:
+        assert compat.set_kernel_tier("ref") == "ref"
+        assert compat.kernel_tier() == "ref"
+        assert compat.explicit_kernel_tier() == "ref"
+    finally:
+        compat.reset_kernel_tier()
+    assert compat.kernel_tier() == before
+
+
+def test_model_tier_never_probed_interpret():
+    if compat.explicit_kernel_tier() is None:
+        assert model_tier() in ("tpu", "ref")
+
+
+def test_coerce_tier_legacy_interpret_flag():
+    assert coerce_tier(None, None) is None
+    assert coerce_tier(None, True) == "interpret"
+    assert coerce_tier(None, False) == "tpu"
+    assert coerce_tier("ref", True) == "ref"      # explicit tier wins
+
+
+# --------------------------------------------------------------------------
+# dispatcher registry
+# --------------------------------------------------------------------------
+
+
+def test_all_kernels_registered_all_tiers():
+    assert set(KERNELS) <= set(DISPATCHER.kernels())
+    for name in KERNELS:
+        tiers = DISPATCHER.registered_tiers(name)
+        assert "ref" in tiers
+        if compat.HAS_PALLAS_TPU:
+            assert "tpu" in tiers and "interpret" in tiers
+
+
+def test_resolve_unknown_kernel_raises():
+    with pytest.raises(KeyError):
+        DISPATCHER.resolve("not_a_kernel")
+    with pytest.raises(ValueError):
+        DISPATCHER.register("flash_attention", "not_a_tier", lambda: None)
+
+
+def test_resolve_falls_down_the_chain():
+    DISPATCHER.register("_chain_probe", "ref", lambda: "ref")
+    try:
+        tier, fn = DISPATCHER.resolve("_chain_probe")
+        # process tier here is interpret (CPU) or tpu; either way the
+        # only registered tier is ref, and resolution must land on it.
+        assert tier == "ref" and fn() == "ref"
+    finally:
+        DISPATCHER._impls.pop("_chain_probe")
+
+
+# --------------------------------------------------------------------------
+# fallback-tier agreement, one test per kernel
+# --------------------------------------------------------------------------
+
+_TOL = dict(rtol=2e-3, atol=2e-3)
+
+
+def _host_tiers(name):
+    """Tiers executable on this host for ``name`` (tpu needs hardware)."""
+    tiers = [t for t in DISPATCHER.registered_tiers(name) if t != "ref"]
+    if not compat.is_tpu_backend():
+        tiers = [t for t in tiers if t != "tpu"]
+    return tiers
+
+
+def test_tier_agreement_flash_attention():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 4, 32, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 32, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 32, 16), jnp.float32)
+    want = ops.flash_attention(q, k, v, tier="ref")
+    for tier in _host_tiers("flash_attention"):
+        got = ops.flash_attention(q, k, v, q_block=16, kv_block=16, tier=tier)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_TOL)
+
+
+def test_tier_agreement_decode_attention():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 4, 1, 16), jnp.float32)
+    kc = jax.random.normal(ks[1], (1, 2, 64, 16), jnp.float32)
+    vc = jax.random.normal(ks[2], (1, 2, 64, 16), jnp.float32)
+    want = ops.decode_attention(q, kc, vc, jnp.int32(17), tier="ref")
+    for tier in _host_tiers("decode_attention"):
+        got = ops.decode_attention(q, kc, vc, jnp.int32(17), kv_block=16,
+                                   tier=tier)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_TOL)
+
+
+def test_tier_agreement_sliced_matmul():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 128), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(3), (128, 256), jnp.float32)
+    ai, ao = jnp.int32(128), jnp.int32(128)
+    want = ops.sliced_matmul(x, w, ai, ao, tier="ref")
+    assert want.shape == (2, 16, 256)
+    for tier in _host_tiers("sliced_matmul"):
+        got = ops.sliced_matmul(x, w, ai, ao, tier=tier)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_TOL)
+
+
+def test_tier_agreement_subnet_rmsnorm():
+    x = jax.random.normal(jax.random.PRNGKey(4), (24, 128), jnp.float32)
+    gt = jax.random.normal(jax.random.PRNGKey(5), (3, 128), jnp.float32)
+    for sid in (0, 2):
+        want = ops.subnet_rmsnorm(x, gt, jnp.int32(sid), tier="ref")
+        for tier in _host_tiers("subnet_rmsnorm"):
+            got = ops.subnet_rmsnorm(x, gt, jnp.int32(sid), tier=tier)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       **_TOL)
+
+
+def test_model_impls_match_kernel_tiers():
+    """The model-grade wrappers agree with the oracle regardless of
+    which tier they resolved to on this host."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (1, 4, 32, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 32, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 32, 16), jnp.float32)
+    got = ops.model_flash_attention(q, k, v)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_TOL)
+
+    qd = jax.random.normal(ks[0], (1, 4, 1, 16), jnp.float32)
+    got = ops.model_decode_attention(qd, k, v, index=jnp.int32(9))
+    want = ref.decode_attention_ref(qd, k, v, 9)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_TOL)

@@ -14,10 +14,10 @@ from repro.configs import get_config
 
 
 def _abstract_plan(arch, shape=(2, 16, 16), axes=("pod", "data", "model")):
-    import jax
     from repro.distributed.sharding import ShardingPlan
-    mesh = jax.sharding.AbstractMesh(shape, axes)
-    return ShardingPlan(mesh, get_config(arch))
+    # compat.make_abstract_mesh under the hood: the AbstractMesh
+    # constructor signature differs across JAX versions.
+    return ShardingPlan.abstract(shape, axes, get_config(arch))
 
 
 class TestShardingRules:
@@ -114,9 +114,9 @@ MULTIDEV = textwrap.dedent("""
 
 
 def test_multidevice_collectives_subprocess():
+    from repro.compat import cpu_subprocess_env
     r = subprocess.run([sys.executable, "-c", MULTIDEV], capture_output=True,
-                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                                       "HOME": "/root"},
+                       text=True, env=cpu_subprocess_env(),
                        cwd="/root/repo", timeout=300)
     assert r.returncode == 0, r.stderr[-3000:]
     out = json.loads(r.stdout.strip().splitlines()[-1])
@@ -152,7 +152,8 @@ def test_mini_dryrun_subprocess():
                 sp["params"], sp["batch"], sp["ctrl"])
             compiled = lowered.compile()
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis()
+        from repro import compat
+        ca = compat.cost_analysis(compiled)
         cb, bd = H.collective_bytes(compiled.as_text())
         t = RooflineTerms(arch="mini", shape="mini_train", mesh="8dev",
                           chips=8, hlo_flops_per_device=ca["flops"],
@@ -166,9 +167,9 @@ def test_mini_dryrun_subprocess():
         print(json.dumps({"ok": True, "dominant": t.dominant,
                           "coll_bytes": cb}))
     """)
+    from repro.compat import cpu_subprocess_env
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                                       "HOME": "/root"},
+                       text=True, env=cpu_subprocess_env(),
                        cwd="/root/repo", timeout=600)
     assert r.returncode == 0, r.stderr[-3000:]
     out = json.loads(r.stdout.strip().splitlines()[-1])

@@ -1,7 +1,7 @@
 """Pareto NAS + predictors (paper §2.2/§4.2 substrate)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config, assigned_archs
 from repro.core import pareto

@@ -2,7 +2,7 @@
 I3), SlackFit-vs-oracle approximation on small instances."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.serving import policies, profiler

@@ -1,7 +1,7 @@
 """Hypothesis property tests: EDF queue invariants + simulator
 conservation (every query accounted exactly once)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.serving import policies, profiler, simulator
