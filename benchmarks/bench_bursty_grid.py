@@ -62,13 +62,16 @@ def run(duration: float = DURATION) -> dict:
             for pol in _policies(prof):
                 res = simulator.simulate(arr, prof, pol, scfg)
                 rows.append({"policy": pol.name,
-                             "slo": res.slo_attainment, "acc": res.mean_acc})
+                             "slo": res.slo_attainment, "acc": res.mean_acc,
+                             "p50_ms": res.latency_p50 * 1e3,
+                             "p99_ms": res.latency_p99 * 1e3})
             results[f"lv{lam_v}_cv{cv2}"] = rows
 
     # print one representative cell + the headline
     cell = results[f"lv{LAMBDA_V[-1]}_cv{CV2[-1]}"]
-    print(table(["policy", "SLO attainment", "mean acc"],
-                [[r["policy"], f"{r['slo']:.4f}", f"{r['acc']:.2f}"]
+    print(table(["policy", "SLO attainment", "mean acc", "p50 ms", "p99 ms"],
+                [[r["policy"], f"{r['slo']:.4f}", f"{r['acc']:.2f}",
+                  f"{r['p50_ms']:.1f}", f"{r['p99_ms']:.1f}"]
                  for r in cell]))
     h = headline(results)
     print(f"\nheadline: +{h['max_acc_gain_at_999_slo']:.2f}% acc at 0.999 SLO "

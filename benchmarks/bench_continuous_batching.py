@@ -1,0 +1,87 @@
+"""Continuous batching (in-flight joins, paper §5) vs decision-time
+batching, through the shared scheduling engine.
+
+Decision-time batching forms a batch once, when a worker frees up;
+continuous batching keeps an under-filled batch open within the
+policy's latency budget, admits queries that arrive in the window (up
+to the profile's realizable batch sizes), and re-consults the policy on
+every join. Compared on the acceptance bursty trace (rate 7000, CV^2 8)
+and the MAF-like trace; the claim is SLO attainment no worse with
+continuous batching and no accuracy regression.
+"""
+from __future__ import annotations
+
+from benchmarks.common import banner, save, table
+from repro.configs import get_config
+from repro.serving import policies, profiler, simulator, traces
+
+RATE = 7000
+CV2 = 8
+DURATION = 8.0
+ACC_TOL = 0.05          # accuracy points; "no regression" tolerance
+
+
+def _run(arr, prof, continuous: bool, n_workers: int = 8):
+    scfg = simulator.SimConfig(n_workers=n_workers, slo=0.036,
+                               continuous_batching=continuous)
+    res = simulator.simulate(arr, prof, policies.SlackFit(), scfg)
+    return {"mode": "continuous" if continuous else "decision-time",
+            "slo": res.slo_attainment, "acc": res.mean_acc,
+            "p50_ms": res.latency_p50 * 1e3, "p99_ms": res.latency_p99 * 1e3,
+            "join_rate": res.n_joins / max(len(arr), 1),
+            "open_batches": res.n_open_batches}
+
+
+def run(duration: float = DURATION) -> dict:
+    banner("bench_continuous_batching (ROADMAP in-flight joins)")
+    cfg = get_config("ofa_resnet")
+    prof = profiler.build_profile(cfg)
+
+    cells = {
+        # acceptance cell: bursty, rate 7000, CV^2 8 (serve.py's split)
+        f"bursty_r{RATE}_cv{CV2}": (
+            traces.bursty_trace(RATE * 0.2, RATE * 0.8, CV2, duration, seed=13),
+            8),
+        # small pool near saturation: drain-then-burst cycles are where
+        # in-flight joins consolidate the stray B=1 dispatches
+        "bursty_r1500_cv8_2w": (
+            traces.bursty_trace(300, 1200, 8, duration, seed=13), 2),
+        "maf_r6400": (traces.maf_like_trace(6400, duration, seed=13), 8),
+    }
+
+    results, rows = {}, []
+    for name, (arr, n_workers) in cells.items():
+        dt = _run(arr, prof, continuous=False, n_workers=n_workers)
+        cb = _run(arr, prof, continuous=True, n_workers=n_workers)
+        results[name] = {"decision_time": dt, "continuous": cb}
+        for r in (dt, cb):
+            rows.append([name, r["mode"], f"{r['slo']:.4f}", f"{r['acc']:.2f}",
+                         f"{r['p50_ms']:.1f}", f"{r['p99_ms']:.1f}",
+                         f"{r['join_rate']:.3f}"])
+    print(table(["trace", "batching", "SLO", "acc", "p50 ms", "p99 ms",
+                 "join rate"], rows))
+
+    key = f"bursty_r{RATE}_cv{CV2}"
+    dt, cb = results[key]["decision_time"], results[key]["continuous"]
+    print(f"\nbursty r{RATE} cv{CV2}: continuous {cb['slo']:.4f} SLO / "
+          f"{cb['acc']:.2f} acc vs decision-time {dt['slo']:.4f} / "
+          f"{dt['acc']:.2f}")
+    claims = {
+        "cb_slo_no_worse_on_bursty": cb["slo"] >= dt["slo"],
+        "cb_no_accuracy_regression_on_bursty": cb["acc"] >= dt["acc"] - ACC_TOL,
+        "cb_slo_no_worse_on_maf":
+            results["maf_r6400"]["continuous"]["slo"]
+            >= results["maf_r6400"]["decision_time"]["slo"],
+        "cb_no_accuracy_regression_on_maf":
+            results["maf_r6400"]["continuous"]["acc"]
+            >= results["maf_r6400"]["decision_time"]["acc"] - ACC_TOL,
+        "joins_happen_somewhere":
+            any(c["continuous"]["join_rate"] > 0 for c in results.values()),
+    }
+    payload = {"cells": results, "claims": claims}
+    save("continuous_batching", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

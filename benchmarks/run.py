@@ -14,7 +14,7 @@ import time
 import traceback
 
 from benchmarks import (bench_acceleration, bench_actuation, bench_bursty_grid,
-                        bench_ilp_oracle,
+                        bench_continuous_batching, bench_ilp_oracle,
                         bench_control_space, bench_fault_tolerance, bench_maf,
                         bench_memory, bench_pareto, bench_policies,
                         bench_scalability, bench_throughput_range)
@@ -27,6 +27,7 @@ ALL = {
     "throughput_range": bench_throughput_range.run,   # Fig 5c
     "control_space": bench_control_space.run,    # Fig 13
     "bursty_grid": bench_bursty_grid.run,        # Fig 8
+    "continuous_batching": bench_continuous_batching.run,  # §5 in-flight joins
     "acceleration": bench_acceleration.run,      # Fig 9
     "maf": bench_maf.run,                        # Fig 10
     "fault_tolerance": bench_fault_tolerance.run,  # Fig 11a

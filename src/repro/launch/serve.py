@@ -33,6 +33,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--faults", default="",
                     help="comma list wid:t, e.g. 7:12,6:24")
+    ap.add_argument("--continuous-batching", action="store_true",
+                    help="keep forming batches open to in-flight joins "
+                         "within the policy's latency budget (paper §5)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -58,10 +61,15 @@ def main():
             wid, t = part.split(":")
             faults[int(wid)] = float(t)
     scfg = simulator.SimConfig(n_workers=args.workers, slo=args.slo_ms / 1e3,
-                               fault_times=faults, seed=args.seed)
+                               fault_times=faults, seed=args.seed,
+                               continuous_batching=args.continuous_batching)
     res = simulator.simulate(arr, prof, pol, scfg)
     out = {"arch": args.arch, "policy": pol.name, "queries": len(arr),
-           "slo_attainment": res.slo_attainment, "mean_acc": res.mean_acc}
+           "continuous_batching": args.continuous_batching,
+           "slo_attainment": res.slo_attainment, "mean_acc": res.mean_acc,
+           "p50_latency_ms": res.latency_p50 * 1e3,
+           "p99_latency_ms": res.latency_p99 * 1e3,
+           "join_rate": res.n_joins / max(len(arr), 1)}
     print(json.dumps(out, indent=1))
 
 

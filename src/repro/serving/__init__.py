@@ -1,3 +1,7 @@
 """SuperServe serving layer: profiler, EDF queue, scheduling policies
-(SlackFit et al.), discrete-event simulator, trace generators, and the
-asyncio router/worker runtime hosting a SubNetAct supernet."""
+(SlackFit et al.), trace generators, and ONE transport-agnostic
+scheduling engine (serving/engine.py: admission, EDF, policy
+invocation, continuous batching, actuation accounting, fault
+re-enqueue) behind two transports — the discrete-event simulator
+(virtual clock) and the asyncio router/worker runtime hosting a
+SubNetAct supernet (wall clock)."""

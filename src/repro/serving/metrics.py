@@ -1,8 +1,9 @@
 """Success metrics (paper §6.1): SLO attainment (R1) and mean serving
-accuracy over SLO-satisfying queries (R2)."""
+accuracy over SLO-satisfying queries (R2), plus end-to-end latency
+percentiles and continuous-batching join counters."""
 from __future__ import annotations
 
-from typing import Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Sequence, Tuple
 
 import numpy as np
 
@@ -40,3 +41,19 @@ def latency_percentiles(queries: Sequence[Query],
     if not lats:
         return [float("nan")] * len(ps)
     return [float(np.percentile(lats, p)) for p in ps]
+
+
+def summarize(queries: Sequence[Query], n_joins: int = 0) -> Dict[str, float]:
+    """One-stop serving report: SLO attainment, mean serving accuracy,
+    p50/p99 end-to-end latency, and the continuous-batching join rate
+    (fraction of queries admitted into an already-forming batch)."""
+    p50, p99 = latency_percentiles(queries)
+    resolved = sum(1 for q in queries if q.finish is not None or q.dropped)
+    return {
+        "slo_attainment": slo_attainment(queries),
+        "mean_acc": mean_serving_accuracy(queries),
+        "served": float(resolved),
+        "p50_latency_s": p50,
+        "p99_latency_s": p99,
+        "join_rate": n_joins / len(queries) if len(queries) else 0.0,
+    }

@@ -25,6 +25,15 @@ from repro.serving.profiler import LatencyProfile
 class Decision:
     pareto_idx: int
     batch_size: int
+    # continuous batching: how long the dispatched batch may stay open
+    # to in-flight joins (the residual slack after the chosen tuple's
+    # latency — waiting longer would endanger the head deadline).
+    join_window: float = 0.0
+
+
+def _join_window(profile: LatencyProfile, pi: int, bi: int,
+                 slack: float) -> float:
+    return max(0.0, float(slack) - float(profile.lat[pi, bi]))
 
 
 class Policy:
@@ -50,7 +59,8 @@ class SlackFit(Policy):
 
     def choose(self, profile, slack, queue_len):
         pi, bi = profile.choose_slackfit(slack, queue_len)
-        return Decision(pi, profile.batches[bi])
+        return Decision(pi, profile.batches[bi],
+                        _join_window(profile, pi, bi, slack))
 
 
 class MaxBatch(Policy):
@@ -73,7 +83,8 @@ class MaxBatch(Policy):
         for cand in order:
             if lat[cand, bi] <= slack:
                 pi = int(cand)
-        return Decision(pi, profile.batches[bi])
+        return Decision(pi, profile.batches[bi],
+                        _join_window(profile, pi, bi, slack))
 
 
 class MaxAcc(Policy):
@@ -91,7 +102,8 @@ class MaxAcc(Policy):
                 pi = int(cand)
         fit = np.where(lat[pi, :cap + 1] <= slack)[0]
         bi = int(fit[-1]) if len(fit) else 0
-        return Decision(pi, profile.batches[bi])
+        return Decision(pi, profile.batches[bi],
+                        _join_window(profile, pi, bi, slack))
 
 
 class ClipperFixed(Policy):
@@ -107,7 +119,8 @@ class ClipperFixed(Policy):
         lat = profile.lat[self.pareto_idx]
         fit = np.where(lat[:cap + 1] <= slack)[0]
         bi = int(fit[-1]) if len(fit) else 0
-        return Decision(self.pareto_idx, profile.batches[bi])
+        return Decision(self.pareto_idx, profile.batches[bi],
+                        _join_window(profile, self.pareto_idx, bi, slack))
 
 
 class INFaaSMinCost(Policy):
@@ -123,7 +136,8 @@ class INFaaSMinCost(Policy):
         lat = profile.lat[pi]
         fit = np.where(lat[:cap + 1] <= slack)[0]
         bi = int(fit[-1]) if len(fit) else 0
-        return Decision(pi, profile.batches[bi])
+        return Decision(pi, profile.batches[bi],
+                        _join_window(profile, pi, bi, slack))
 
 
 ALL_POLICIES = {

@@ -43,8 +43,14 @@ class EDFQueue:
         return self._heap[0].deadline - now if self._heap else None
 
     def pop_batch(self, n: int) -> List[Query]:
-        """Dequeue the n most urgent queries."""
-        return [heapq.heappop(self._heap) for _ in range(min(n, len(self._heap)))]
+        """Dequeue the n most urgent queries (clamped to queue length;
+        n <= 0 dequeues nothing)."""
+        return [heapq.heappop(self._heap)
+                for _ in range(min(max(n, 0), len(self._heap)))]
+
+    def drain(self) -> List[Query]:
+        """Dequeue everything, most urgent first (router shutdown)."""
+        return self.pop_batch(len(self._heap))
 
     def drop_expired(self, now: float, min_service: float) -> List[Query]:
         """Drop queries that cannot possibly meet their deadline even at

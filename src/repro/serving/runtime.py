@@ -1,12 +1,17 @@
-"""Asyncio router + worker runtime (paper §5) hosting a *real* JAX
-supernet via SubNetAct.
+"""Asyncio transport for the shared scheduling engine (paper §5),
+hosting a *real* JAX supernet via SubNetAct.
 
-The router owns the global EDF queue and invokes the pluggable policy
-whenever a worker signals availability and the queue is non-empty; the
-worker actuates the chosen subnet *in place* by passing a different
-control tuple to the same jitted executable — no reload, no recompile
-(SubNetAct). Mirrors the paper's C++/gRPC architecture with in-process
-asyncio semantics (async submission, callbacks, worker heartbeats).
+All scheduling decisions live in ``serving/engine.py``; this module
+supplies wall-clock time, real worker execution (``asyncio.to_thread``
+so the event loop keeps routing), and async plumbing: event-driven
+scheduling (an ``asyncio.Condition`` signaled on submit/completion —
+no sleep-polling), continuous-batching join windows, and transparent
+fault handling (a worker killed mid-batch has its in-flight queries
+re-enqueued and re-served by survivors, mirroring the simulator).
+
+For deterministic tests, ``Router.run_virtual`` drives the *same*
+engine on a ``VirtualClock`` through the shared event loop — the
+parity path proving router and simulator schedule identically.
 """
 from __future__ import annotations
 
@@ -17,10 +22,12 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.serving.metrics import mean_serving_accuracy, slo_attainment
+from repro.serving.engine import (CompletionRecord, Dispatch, EngineConfig,
+                                  SchedulingEngine, VirtualClock, WallClock,
+                                  drive)
 from repro.serving.policies import Policy
 from repro.serving.profiler import LatencyProfile
-from repro.serving.queue import EDFQueue, Query
+from repro.serving.queue import Query
 
 
 @dataclass
@@ -44,107 +51,218 @@ class WorkerHandle:
 
 
 class Router:
-    """Asynchronous router: enqueue -> schedule -> dispatch -> respond."""
+    """Asynchronous router: enqueue -> schedule -> dispatch -> respond.
+
+    The engine owns every scheduling decision; the router owns time
+    (injected clock), futures, and execution."""
 
     def __init__(self, profile: LatencyProfile, policy: Policy,
-                 workers: Sequence[WorkerHandle]):
+                 workers: Sequence[WorkerHandle],
+                 clock=None, engine_cfg: Optional[EngineConfig] = None):
         self.profile = profile
         self.policy = policy
         self.workers = list(workers)
-        self.edf = EDFQueue()
+        self.clock = clock if clock is not None else WallClock()
+        self.engine = SchedulingEngine(
+            profile, policy, engine_cfg or EngineConfig(),
+            worker_ids=[w.wid for w in self.workers], on_drop=self._on_drop)
         self._payloads: Dict[int, ServedQuery] = {}
-        self._idle: asyncio.Queue = asyncio.Queue()
+        self._idle: List[WorkerHandle] = []
+        self._open_events: Dict[int, asyncio.Event] = {}
+        self._work = asyncio.Condition()
+        self._task: Optional[asyncio.Task] = None
         self._qid = 0
-        self.completed: List[Query] = []
         self._closed = False
 
+    # -- legacy surface -------------------------------------------------
+
+    @property
+    def edf(self):
+        return self.engine.edf
+
+    @property
+    def completed(self) -> List[Query]:
+        """Queries with a resolved outcome (served or dropped)."""
+        return [q for q in self.engine.queries
+                if q.finish is not None or q.dropped]
+
+    # -- async serving path ---------------------------------------------
+
     async def start(self):
-        for w in self.workers:
-            if w.alive:
-                self._idle.put_nowait(w)
+        self._idle = [w for w in self.workers if w.alive]
         self._task = asyncio.create_task(self._schedule_loop())
 
     async def submit(self, payload: Any, slo_s: float) -> asyncio.Future:
-        now = time.perf_counter()
+        now = self.clock.now()
         q = Query(deadline=now + slo_s, seq=0, arrival=now, qid=self._qid)
         self._qid += 1
         sq = ServedQuery(q, payload, asyncio.get_running_loop().create_future())
         self._payloads[q.qid] = sq
-        self.edf.push(q)
+        async with self._work:
+            self.engine.admit(q)
+            if not self._idle:
+                # no idle capacity: the query may join a forming batch
+                for d in self.engine.try_join(now):
+                    ev = self._open_events.get(d.wid)
+                    if ev is not None:
+                        ev.set()        # batch filled/urgent: launch now
+            self._work.notify_all()
         return sq.done
 
     def kill_worker(self, wid: int):
         """Fault injection: worker stops accepting batches (heartbeat
-        loss); SlackFit absorbs the capacity loss by actuating down."""
+        loss). Its in-flight queries are transparently re-enqueued so
+        survivors re-serve them; SlackFit absorbs the capacity loss by
+        actuating down."""
         for w in self.workers:
             if w.wid == wid:
                 w.alive = False
+        self._idle = [w for w in self._idle if w.wid != wid]
+        requeued = self.engine.fault(wid)
+        ev = self._open_events.get(wid)
+        if ev is not None:
+            ev.set()                    # abort a forming batch's window
+        if requeued:
+            try:
+                asyncio.get_running_loop().create_task(self._notify())
+            except RuntimeError:
+                pass                    # no loop: nothing to wake
+
+    async def _notify(self):
+        async with self._work:
+            self._work.notify_all()
+
+    def _on_drop(self, q: Query):
+        sq = self._payloads.pop(q.qid, None)
+        if sq is not None and not sq.done.done():
+            sq.done.set_result((None, 0.0))
 
     async def _schedule_loop(self):
-        loop = asyncio.get_running_loop()
-        while not self._closed:
-            worker: WorkerHandle = await self._idle.get()
+        while True:
+            async with self._work:
+                await self._work.wait_for(
+                    lambda: self._closed
+                    or (bool(self._idle) and len(self.engine.edf) > 0))
+                if self._closed:
+                    return
+                worker = self._idle.pop(0)
             if not worker.alive:
-                continue            # dead workers leave the pool
-            while not len(self.edf) and not self._closed:
-                await asyncio.sleep(0.0005)
-            if self._closed:
-                return
-            now = time.perf_counter()
-            dropped = self.edf.drop_expired(now, float(self.profile.lat[:, 0].min()))
-            for q in dropped:
-                sq = self._payloads.pop(q.qid, None)
-                if sq is not None:
-                    self.completed.append(q)
-                    if not sq.done.done():
-                        sq.done.set_result((None, 0.0))
-            if not len(self.edf):
-                self._idle.put_nowait(worker)
                 continue
-            slack = self.edf.head_slack(now)
-            dec = self.policy.choose(self.profile, slack, len(self.edf))
-            batch = self.edf.pop_batch(dec.batch_size)
-            sqs = [self._payloads.pop(q.qid) for q in batch]
-            acc = float(self.profile.accs[dec.pareto_idx])
-            loop.create_task(self._run_batch(worker, dec.pareto_idx, sqs, acc))
+            d = self.engine.next_dispatch(worker.wid, self.clock.now())
+            if d is None:
+                # drops emptied the queue, or the policy declined to
+                # schedule: park until new work/capacity arrives rather
+                # than spinning on an unchanged queue
+                async with self._work:
+                    self._idle.append(worker)
+                    if len(self.engine.edf) > 0 and not self._closed:
+                        await self._work.wait()
+                continue
+            if d.open:
+                asyncio.create_task(self._form_and_run(worker, d))
+            else:
+                asyncio.create_task(self._run_batch(worker, d))
 
-    async def _run_batch(self, worker: WorkerHandle, subnet_idx: int,
-                         sqs: List[ServedQuery], acc: float):
-        payloads = [s.payload for s in sqs]
-        # SubNetAct actuation == a different control tuple; executed in a
-        # thread so the event loop keeps routing.
-        preds = await asyncio.to_thread(worker.run, subnet_idx, payloads)
-        worker.current_subnet = subnet_idx
-        fin = time.perf_counter()
-        for i, s in enumerate(sqs):
-            s.query.finish = fin
-            s.query.served_acc = acc
-            self.completed.append(s.query)
-            if not s.done.done():
-                s.done.set_result((np.asarray(preds)[i], acc))
-        if worker.alive:
-            self._idle.put_nowait(worker)
+    async def _form_and_run(self, worker: WorkerHandle, d: Dispatch):
+        """Hold an open batch for its join window (continuous batching):
+        launch early if joins fill it, on fault, or at window expiry."""
+        ev = asyncio.Event()
+        self._open_events[d.wid] = ev
+        try:
+            while not ev.is_set() and not d.faulted:
+                delay = d.launch_at - self.clock.now()
+                if delay <= 0:
+                    break
+                try:
+                    await asyncio.wait_for(ev.wait(), timeout=delay)
+                except asyncio.TimeoutError:
+                    break
+        finally:
+            self._open_events.pop(d.wid, None)
+        if d.faulted:
+            return                      # queries already re-enqueued
+        await self._run_batch(worker, d)
+
+    async def _run_batch(self, worker: WorkerHandle, d: Dispatch):
+        if d.faulted:                   # killed between formation and start
+            await self._notify()
+            return
+        if not d.launched:
+            self.engine.launch(d, self.clock.now())
+        # payloads may be gone for queries resolved by an early drain()
+        pairs = [(q, self._payloads.get(q.qid)) for q in d.queries]
+        payloads = [sq.payload for _, sq in pairs if sq is not None]
+        if payloads:
+            # SubNetAct actuation == a different control tuple; executed
+            # in a thread so the event loop keeps routing.
+            preds = await asyncio.to_thread(worker.run, d.pareto_idx, payloads)
+            worker.current_subnet = d.pareto_idx
+        else:
+            preds = []
+        fin = self.clock.now()
+        if d.faulted:
+            # worker died mid-batch: the engine already re-enqueued the
+            # queries — discard the (lost) result and wake the scheduler
+            await self._notify()
+            return
+        self.engine.complete(d, fin)
+        arr = np.asarray(preds)
+        i = 0
+        for q, sq in pairs:
+            if sq is None:
+                continue
+            self._payloads.pop(q.qid, None)
+            if not sq.done.done():
+                sq.done.set_result((arr[i], d.acc))
+            i += 1
+        async with self._work:
+            if worker.alive:
+                self._idle.append(worker)
+            self._work.notify_all()
 
     async def drain(self, timeout: float = 10.0):
         t0 = time.perf_counter()
         while self._payloads and time.perf_counter() - t0 < timeout:
             await asyncio.sleep(0.01)
         self._closed = True
-        self._task.cancel()
-        # account dropped-but-unresolved queries
-        for s in self._payloads.values():
-            s.query.dropped = True
-            self.completed.append(s.query)
-            if not s.done.done():
-                s.done.set_result((None, 0.0))
+        async with self._work:
+            self._work.notify_all()
+        if self._task is not None:
+            self._task.cancel()
+        # account dropped-but-unresolved queries (still queued, forming,
+        # or lost to a dead worker)
+        self.engine.abandon_pending()
+        for sq in self._payloads.values():
+            sq.query.dropped = True
+            if not sq.done.done():
+                sq.done.set_result((None, 0.0))
         self._payloads.clear()
 
     def stats(self) -> Dict[str, float]:
-        return {
-            "slo_attainment": slo_attainment(self.completed),
-            "mean_acc": mean_serving_accuracy(self.completed),
-            "served": float(len(self.completed)),
-        }
+        return self.engine.stats()
+
+    def records(self) -> List[CompletionRecord]:
+        return self.engine.records()
+
+    # -- deterministic parity path --------------------------------------
+
+    def run_virtual(self, arrivals: Sequence[float], slo_s: float,
+                    fault_times: Optional[Dict[int, float]] = None
+                    ) -> List[CompletionRecord]:
+        """Drive this router's engine to quiescence on its VirtualClock:
+        the same shared event loop as the simulator, with service times
+        from the engine (no real execution). Used by parity tests to
+        prove router and simulator produce identical per-query
+        schedules through the shared core."""
+        if not isinstance(self.clock, VirtualClock):
+            raise TypeError("run_virtual requires a VirtualClock router")
+        queries = [Query(deadline=float(t) + slo_s, seq=i,
+                         arrival=float(t), qid=i)
+                   for i, t in enumerate(arrivals)]
+        drive(self.engine, queries,
+              [w.wid for w in self.workers if w.alive],
+              fault_times=fault_times, clock=self.clock)
+        return self.engine.records()
 
 
 def make_supernet_workers(n: int, step_fn: Callable[[int, Any], Any],

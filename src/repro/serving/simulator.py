@@ -1,25 +1,31 @@
-"""Deterministic discrete-event simulator of the SuperServe router +
-worker pool (paper §5 architecture, §6 experiments).
+"""Discrete-event transport for the shared scheduling engine (paper §5
+architecture, §6 experiments).
 
-Models: global EDF queue, policy invocation on worker-availability,
-per-batch service latency from the profiler, SubNetAct actuation vs.
-model-switch loading costs, worker faults with in-flight re-enqueue
-(transparent fault tolerance, Fig 11a), stragglers with optional
-backup-batch hedging, and full per-query accounting.
+All scheduling decisions — admission + infeasible-drop, EDF ordering,
+policy invocation, batch formation (incl. continuous-batching joins),
+actuation-cost accounting, fault re-enqueue — live in
+``serving/engine.py``; this module only supplies virtual time and the
+simulation-specific service model: per-batch latency from the profiler,
+stragglers with optional backup-batch hedging, and worker fault events.
+The asyncio runtime (serving/runtime.py) drives the *same* engine under
+wall clock with real JAX workers.
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence
 
 import numpy as np
 
-from repro.serving.metrics import mean_serving_accuracy, slo_attainment
-from repro.serving.policies import Decision, Policy
+from repro.serving.engine import (EV_FREE, CompletionRecord, DispatchRecord,
+                                  Dispatch, EngineConfig, SchedulingEngine,
+                                  completion_records, drive)
+from repro.serving.metrics import (latency_percentiles, mean_serving_accuracy,
+                                   slo_attainment, summarize)
 from repro.serving.profiler import (SUBNETACT_ACTUATION_S, HardwareProfile,
-                                    LatencyProfile, RTX2080TI, loading_latency)
-from repro.serving.queue import EDFQueue, Query
+                                    LatencyProfile, RTX2080TI)
+from repro.serving.policies import Policy
+from repro.serving.queue import Query
 
 
 @dataclass
@@ -35,18 +41,16 @@ class SimConfig:
     hedge_trigger: float = 2.0              # x expected latency
     fault_times: Dict[int, float] = field(default_factory=dict)
     drop_infeasible: bool = True
+    continuous_batching: bool = False       # in-flight joins (paper §5)
+    max_join_window: float = 0.25           # cap (s) on batch-forming time
     seed: int = 0
 
-
-@dataclass
-class DispatchRecord:
-    t: float
-    worker: int
-    batch: int
-    pareto_idx: int
-    acc: float
-    latency: float
-    queue_len: int
+    def engine_config(self) -> EngineConfig:
+        return EngineConfig(actuation_delay=self.actuation_delay,
+                            load_on_switch=self.load_on_switch, hw=self.hw,
+                            drop_infeasible=self.drop_infeasible,
+                            continuous_batching=self.continuous_batching,
+                            max_join_window=self.max_join_window)
 
 
 @dataclass
@@ -54,6 +58,8 @@ class SimResult:
     queries: List[Query]
     dispatches: List[DispatchRecord]
     duration: float
+    n_joins: int = 0                        # queries joined in flight
+    n_open_batches: int = 0                 # batches that opened a window
 
     @property
     def slo_attainment(self) -> float:
@@ -62,6 +68,21 @@ class SimResult:
     @property
     def mean_acc(self) -> float:
         return mean_serving_accuracy(self.queries)
+
+    @property
+    def latency_p50(self) -> float:
+        return latency_percentiles(self.queries)[0]
+
+    @property
+    def latency_p99(self) -> float:
+        return latency_percentiles(self.queries)[1]
+
+    @property
+    def records(self) -> List[CompletionRecord]:
+        return completion_records(self.queries)
+
+    def stats(self) -> Dict[str, float]:
+        return summarize(self.queries, n_joins=self.n_joins)
 
     def series(self, window: float = 1.0):
         """Per-window (t, qps, mean batch, mean acc) system dynamics."""
@@ -81,97 +102,35 @@ class SimResult:
         return np.asarray(rows)
 
 
-# event kinds, ordered so simultaneous events process deterministically
-_ARRIVAL, _FAULT, _FREE = 0, 1, 2
-
-
 def simulate(arrivals: Sequence[float], profile: LatencyProfile,
              policy: Policy, cfg: SimConfig) -> SimResult:
     rng = np.random.default_rng(cfg.seed)
-    policy.reset()
 
     queries = [Query(deadline=float(t) + cfg.slo, seq=i, arrival=float(t), qid=i)
                for i, t in enumerate(arrivals)]
     duration = (float(arrivals[-1]) if len(arrivals) else 0.0) + 4 * cfg.slo
 
-    events: List[Tuple[float, int, int]] = []
-    for q in queries:
-        heapq.heappush(events, (q.arrival, _ARRIVAL, q.qid))
-    for wid, t in cfg.fault_times.items():
-        heapq.heappush(events, (float(t), _FAULT, wid))
+    engine = SchedulingEngine(profile, policy, cfg.engine_config(),
+                              worker_ids=range(cfg.n_workers))
 
-    edf = EDFQueue()
-    idle: List[int] = list(range(cfg.n_workers))
-    dead: set = set()
-    worker_model: Dict[int, Optional[int]] = {w: None for w in idle}
-    inflight: Dict[int, Tuple[float, List[Query]]] = {}
-    dispatches: List[DispatchRecord] = []
-    min_service = float(profile.lat.min())
+    def service(d: Dispatch, now: float, idle: List[int], push) -> float:
+        """Simulation-owned service model: the engine's expectation,
+        perturbed by stragglers, mitigated by backup-batch hedging."""
+        lat = d.service
+        if cfg.straggler_prob and rng.random() < cfg.straggler_prob:
+            lat *= cfg.straggler_factor
+            if cfg.hedging and idle:
+                # backup batch on a spare worker after the trigger
+                bwid = idle.pop(0)
+                engine.hold(bwid)       # busy for the spare-capacity gate
+                backup_fin = now + cfg.hedge_trigger * d.service + d.service
+                lat = min(lat, backup_fin - now)
+                push(backup_fin, EV_FREE, bwid)
+        return lat
 
-    def dispatch(now: float) -> None:
-        while idle and len(edf):
-            if cfg.drop_infeasible:
-                edf.drop_expired(now, min_service)
-            if not len(edf):
-                return
-            slack = edf.head_slack(now)
-            dec: Optional[Decision] = policy.choose(profile, slack, len(edf))
-            if dec is None:
-                return
-            wid = idle.pop(0)
-            batch = edf.pop_batch(dec.batch_size)
-            eff_b = len(batch)
-            lat = profile.latency(dec.pareto_idx, eff_b)
-            # actuation: SubNetAct control-swap vs model-switch loading
-            if worker_model[wid] != dec.pareto_idx:
-                lat += cfg.actuation_delay
-                if cfg.load_on_switch:
-                    wb = (profile.points[dec.pareto_idx].weight_mb * 2**20
-                          if profile.points else 100e6)
-                    lat += loading_latency(cfg.hw, wb)
-                worker_model[wid] = dec.pareto_idx
-            expected = lat
-            if cfg.straggler_prob and rng.random() < cfg.straggler_prob:
-                lat *= cfg.straggler_factor
-                if cfg.hedging and idle:
-                    # backup batch on a spare worker after the trigger
-                    bwid = idle.pop(0)
-                    backup_fin = now + cfg.hedge_trigger * expected + expected
-                    lat = min(lat, backup_fin - now)
-                    inflight[bwid] = (backup_fin, [])
-                    heapq.heappush(events, (backup_fin, _FREE, bwid))
-            fin = now + lat
-            acc = float(profile.accs[dec.pareto_idx])
-            for q in batch:
-                q.finish = fin
-                q.served_acc = acc
-            inflight[wid] = (fin, batch)
-            dispatches.append(DispatchRecord(now, wid, eff_b, dec.pareto_idx,
-                                             acc, lat, len(edf)))
-            heapq.heappush(events, (fin, _FREE, wid))
+    drive(engine, queries, range(cfg.n_workers),
+          fault_times=cfg.fault_times, service_fn=service)
 
-    while events:
-        now, kind, ident = heapq.heappop(events)
-        if kind == _ARRIVAL:
-            edf.push(queries[ident])
-            dispatch(now)
-        elif kind == _FREE:
-            if ident in dead:
-                continue
-            inflight.pop(ident, None)
-            idle.append(ident)
-            dispatch(now)
-        elif kind == _FAULT:
-            dead.add(ident)
-            if ident in idle:
-                idle.remove(ident)
-            # transparent fault tolerance: re-enqueue the in-flight batch
-            if ident in inflight:
-                _, batch = inflight.pop(ident)
-                for q in batch:
-                    q.finish = None
-                    q.served_acc = None
-                    edf.push(q)
-            dispatch(now)
-
-    return SimResult(queries=queries, dispatches=dispatches, duration=duration)
+    return SimResult(queries=queries, dispatches=engine.dispatches,
+                     duration=duration, n_joins=engine.n_joins,
+                     n_open_batches=engine.n_open_batches)

@@ -1,0 +1,144 @@
+"""Shared scheduling engine: router/simulator parity through the one
+core, continuous-batching join semantics, and EDF queue edge cases."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving import policies, profiler, simulator, traces
+from repro.serving.engine import EngineConfig, VirtualClock
+from repro.serving.queue import EDFQueue, Query
+from repro.serving.runtime import Router, WorkerHandle
+
+PROF = profiler.build_profile(get_config("ofa_resnet"))
+
+
+def _virtual_router(n_workers: int, continuous: bool = False) -> Router:
+    workers = [WorkerHandle(wid=i, run=lambda idx, p: np.zeros(len(p)))
+               for i in range(n_workers)]
+    return Router(PROF, policies.SlackFit(), workers, clock=VirtualClock(),
+                  engine_cfg=EngineConfig(continuous_batching=continuous))
+
+
+class TestParity:
+    """Acceptance: Router (fake clock) and Simulator produce identical
+    per-query completion records on a seeded bursty trace because both
+    are transports over the same SchedulingEngine."""
+
+    def test_router_matches_simulator_on_bursty_trace(self):
+        arr = traces.bursty_trace(1500, 5550, 8, 3.0, seed=17)
+        sim = simulator.simulate(arr, PROF, policies.SlackFit(),
+                                 simulator.SimConfig(n_workers=4, slo=0.036))
+        router = _virtual_router(4)
+        recs = router.run_virtual(arr, slo_s=0.036)
+        assert len(recs) == len(arr)
+        assert recs == sim.records
+        assert router.stats()["slo_attainment"] == sim.slo_attainment
+        assert router.stats()["mean_acc"] == sim.mean_acc
+
+    def test_parity_with_continuous_batching_and_faults(self):
+        arr = traces.bursty_trace(400, 1600, 4, 3.0, seed=23)
+        scfg = simulator.SimConfig(n_workers=3, slo=0.036,
+                                   continuous_batching=True,
+                                   fault_times={2: 1.0})
+        sim = simulator.simulate(arr, PROF, policies.SlackFit(), scfg)
+        router = _virtual_router(3, continuous=True)
+        recs = router.run_virtual(arr, slo_s=0.036, fault_times={2: 1.0})
+        assert recs == sim.records
+        assert router.engine.n_joins == sim.n_joins
+
+
+class TestContinuousBatching:
+    def test_arrival_inside_window_joins_the_forming_batch(self):
+        """Two workers, generous SLO: q0 opens a join window on worker 0
+        (worker 1 is spare), q1 takes worker 1, and q2 — arriving with
+        no idle capacity left — joins q0's forming batch (same finish).
+        A late query after launch is served separately."""
+        arr = [0.0, 0.001, 0.002, 0.2]
+        scfg = simulator.SimConfig(n_workers=2, slo=0.05,
+                                   continuous_batching=True)
+        res = simulator.simulate(arr, PROF, policies.SlackFit(), scfg)
+        q0, q1, q2, q3 = res.queries
+        assert res.n_joins >= 1
+        assert q0.finish == q2.finish            # joined the open batch
+        assert q3.finish is not None and q3.finish != q0.finish
+        assert res.slo_attainment == 1.0
+        # the joined batch dispatched once with both queries
+        assert any(d.batch == 2 for d in res.dispatches)
+
+    def test_decision_time_batching_never_joins(self):
+        arr = [0.0, 0.001, 0.002, 0.2]
+        scfg = simulator.SimConfig(n_workers=2, slo=0.05,
+                                   continuous_batching=False)
+        res = simulator.simulate(arr, PROF, policies.SlackFit(), scfg)
+        assert res.n_joins == 0 and res.n_open_batches == 0
+        assert res.queries[0].finish != res.queries[2].finish
+
+    def test_no_window_without_spare_capacity(self):
+        """Holding the pool's last free worker is never allowed: with a
+        single worker, continuous batching degrades to decision-time."""
+        arr = [0.0, 0.001, 0.002]
+        scfg = simulator.SimConfig(n_workers=1, slo=0.05,
+                                   continuous_batching=True)
+        res = simulator.simulate(arr, PROF, policies.SlackFit(), scfg)
+        assert res.n_open_batches == 0 and res.n_joins == 0
+
+    def test_joins_never_break_feasible_deadlines(self):
+        """A join is admitted only if the batch still meets its earliest
+        member deadline at launch: under a light feasible load, holding
+        batches open must not create SLO misses."""
+        arr = traces.bursty_trace(200, 800, 2, 4.0, seed=3)
+        for continuous in (False, True):
+            res = simulator.simulate(
+                arr, PROF, policies.SlackFit(),
+                simulator.SimConfig(n_workers=8,
+                                    continuous_batching=continuous))
+            assert res.slo_attainment > 0.999
+
+    def test_joins_capped_at_profile_max_batch(self):
+        """A flood of simultaneous arrivals can never grow a forming
+        batch past the largest profiled (realizable) batch size."""
+        arr = np.full(200, 0.0)
+        scfg = simulator.SimConfig(n_workers=2, slo=1.0,
+                                   continuous_batching=True)
+        res = simulator.simulate(arr, PROF, policies.SlackFit(), scfg)
+        assert max(d.batch for d in res.dispatches) <= PROF.batches[-1]
+
+    def test_policy_decision_carries_join_window(self):
+        dec = policies.SlackFit().choose(PROF, 0.05, 1)
+        assert dec.join_window >= 0.0
+        assert dec.join_window <= 0.05
+        # tight slack leaves no room to hold the batch open
+        tight = policies.SlackFit().choose(PROF, float(PROF.lat.min()), 1)
+        assert tight.join_window <= 1e-9 + float(PROF.lat.min())
+
+
+class TestEDFQueueEdges:
+    def test_pop_batch_on_empty_queue(self):
+        assert EDFQueue().pop_batch(4) == []
+
+    def test_pop_batch_n_exceeds_len_and_nonpositive(self):
+        q = EDFQueue()
+        for i in range(3):
+            q.push(Query(deadline=float(i), seq=0, arrival=0.0, qid=i))
+        assert q.pop_batch(0) == []
+        assert q.pop_batch(-2) == []
+        got = q.pop_batch(10)
+        assert [g.qid for g in got] == [0, 1, 2]
+        assert len(q) == 0
+
+    def test_drop_expired_on_empty_queue(self):
+        assert EDFQueue().drop_expired(1.0, 0.01) == []
+
+    def test_drop_expired_all_expired(self):
+        q = EDFQueue()
+        for i in range(4):
+            q.push(Query(deadline=0.1 * i, seq=0, arrival=0.0, qid=i))
+        dropped = q.drop_expired(now=10.0, min_service=0.01)
+        assert len(dropped) == 4 and len(q) == 0
+        assert all(d.dropped for d in dropped)
+
+    def test_drain_returns_urgency_order(self):
+        q = EDFQueue()
+        for i, d in enumerate([0.5, 0.1, 0.9]):
+            q.push(Query(deadline=d, seq=0, arrival=0.0, qid=i))
+        assert [x.qid for x in q.drain()] == [1, 0, 2]
+        assert len(q) == 0

@@ -70,3 +70,25 @@ def test_simulator_conserves_queries(seed, workers, polname):
     assert unfinished == 0                       # no faults -> all resolve
     # dispatched batch sizes never exceed what the queue could supply
     assert all(d.batch >= 1 for d in res.dispatches)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 8),
+       st.sampled_from(["slackfit", "maxbatch", "infaas"]))
+@settings(max_examples=20, deadline=None)
+def test_continuous_batching_conserves_queries(seed, workers, polname):
+    """Conservation holds with in-flight joins: a query that joins a
+    forming batch is served exactly once, never lost or duplicated."""
+    rng = np.random.default_rng(seed)
+    arr = np.sort(rng.uniform(0, 0.5, size=rng.integers(1, 120)))
+    pol = policies.ALL_POLICIES[polname]()
+    res = simulator.simulate(
+        arr, PROF, pol,
+        simulator.SimConfig(n_workers=workers, seed=seed,
+                            continuous_batching=True))
+    assert len(res.queries) == len(arr)
+    served = sum(1 for q in res.queries
+                 if q.finish is not None and not q.dropped)
+    dropped = sum(1 for q in res.queries if q.dropped)
+    assert served + dropped == len(arr)          # all resolve, exactly once
+    assert sum(d.batch for d in res.dispatches) == served
+    assert all(d.batch <= PROF.batches[-1] for d in res.dispatches)
