@@ -1,6 +1,11 @@
 """Benchmark aggregator: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--skip NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only SUBSTR] [--skip SUBSTR]
+
+``--only`` / ``--skip`` match benchmark names by *substring* (e.g.
+``--only cluster`` or ``--only maf fault``), so CI can gate on any
+subset; the runner exits nonzero when a claim fails, a benchmark
+errors, or ``--only`` matches nothing.
 
 Each bench prints its table, persists results/bench/<name>.json, and
 returns a ``claims`` dict of paper-claim booleans; the runner prints
@@ -14,10 +19,11 @@ import time
 import traceback
 
 from benchmarks import (bench_acceleration, bench_actuation, bench_bursty_grid,
-                        bench_continuous_batching, bench_ilp_oracle,
-                        bench_control_space, bench_fault_tolerance, bench_maf,
-                        bench_memory, bench_pareto, bench_policies,
-                        bench_scalability, bench_throughput_range)
+                        bench_cluster_scaleout, bench_continuous_batching,
+                        bench_ilp_oracle, bench_control_space,
+                        bench_fault_tolerance, bench_maf, bench_memory,
+                        bench_pareto, bench_policies, bench_scalability,
+                        bench_throughput_range)
 from benchmarks.common import banner, save, table
 
 ALL = {
@@ -28,6 +34,7 @@ ALL = {
     "control_space": bench_control_space.run,    # Fig 13
     "bursty_grid": bench_bursty_grid.run,        # Fig 8
     "continuous_batching": bench_continuous_batching.run,  # §5 in-flight joins
+    "cluster_scaleout": bench_cluster_scaleout.run,  # multi-replica plane
     "acceleration": bench_acceleration.run,      # Fig 9
     "maf": bench_maf.run,                        # Fig 10
     "fault_tolerance": bench_fault_tolerance.run,  # Fig 11a
@@ -37,17 +44,29 @@ ALL = {
 }
 
 
+def select(only, skip) -> list:
+    """Substring-match benchmark names (exact names still match, being
+    substrings of themselves)."""
+    names = [n for n in ALL
+             if only is None or any(s in n for s in only)]
+    return [n for n in names if not any(s in n for s in skip)]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", nargs="*", default=None)
-    ap.add_argument("--skip", nargs="*", default=[])
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="run benchmarks whose name contains any SUBSTR")
+    ap.add_argument("--skip", nargs="*", default=[],
+                    help="skip benchmarks whose name contains any SUBSTR")
     args = ap.parse_args(argv)
 
-    names = args.only or list(ALL)
+    names = select(args.only, args.skip)
+    if not names:
+        print(f"--only {args.only} --skip {args.skip} matches no benchmark "
+              f"out of: {', '.join(ALL)}")
+        return 2
     scoreboard, failures = [], []
     for name in names:
-        if name in args.skip:
-            continue
         t0 = time.time()
         try:
             payload = ALL[name]()

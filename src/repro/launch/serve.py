@@ -5,7 +5,10 @@
 
 Drives the production serving stack at full scale through the
 discrete-event engine (the real asyncio runtime is demonstrated by
-examples/serve_bursty.py on this host's actual devices).
+examples/serve_bursty.py on this host's actual devices). With
+``--replicas N`` (N > 1) the same trace is served by the multi-replica
+cluster plane — N engines behind the coordinator, placement chosen by
+``--placement``.
 """
 from __future__ import annotations
 
@@ -13,7 +16,7 @@ import argparse
 import json
 
 from repro.configs import get_config
-from repro.serving import policies, profiler, simulator, traces
+from repro.serving import cluster, policies, profiler, simulator, traces
 
 
 def main():
@@ -28,11 +31,22 @@ def main():
     ap.add_argument("--cv2", type=float, default=4)
     ap.add_argument("--tau", type=float, default=500)
     ap.add_argument("--duration", type=float, default=10.0)
-    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=8,
+                    help="workers per replica group")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica groups; >1 serves through the cluster "
+                         "coordinator (one engine per replica)")
+    ap.add_argument("--placement", default="round_robin",
+                    choices=sorted(cluster.PLACEMENTS),
+                    help="replica placement policy (cluster mode only)")
     ap.add_argument("--slo-ms", type=float, default=36.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--faults", default="",
-                    help="comma list wid:t, e.g. 7:12,6:24")
+                    help="comma list wid:t, e.g. 7:12,6:24 "
+                         "(cluster mode: rid.wid:t)")
+    ap.add_argument("--replica-deaths", default="",
+                    help="comma list rid:t — whole replica groups dying "
+                         "(cluster mode only)")
     ap.add_argument("--continuous-batching", action="store_true",
                     help="keep forming batches open to in-flight joins "
                          "within the policy's latency budget (paper §5)")
@@ -55,21 +69,47 @@ def main():
     else:
         arr = traces.maf_like_trace(args.rate, args.duration, seed=args.seed)
 
-    faults = {}
-    if args.faults:
-        for part in args.faults.split(","):
-            wid, t = part.split(":")
-            faults[int(wid)] = float(t)
-    scfg = simulator.SimConfig(n_workers=args.workers, slo=args.slo_ms / 1e3,
-                               fault_times=faults, seed=args.seed,
-                               continuous_batching=args.continuous_batching)
-    res = simulator.simulate(arr, prof, pol, scfg)
+    if args.replicas > 1:
+        faults = {}
+        if args.faults:
+            for part in args.faults.split(","):
+                rw, t = part.split(":")
+                rid, wid = rw.split(".")
+                faults[(int(rid), int(wid))] = float(t)
+        deaths = {}
+        if args.replica_deaths:
+            for part in args.replica_deaths.split(","):
+                rid, t = part.split(":")
+                deaths[int(rid)] = float(t)
+        ccfg = simulator.ClusterConfig(
+            n_replicas=args.replicas, workers_per_replica=args.workers,
+            placement=args.placement, placement_seed=args.seed,
+            slo=args.slo_ms / 1e3, fault_times=faults, replica_deaths=deaths,
+            continuous_batching=args.continuous_batching)
+        res = simulator.simulate_cluster(arr, prof, pol, ccfg)
+        st = res.stats()
+        extra = {"replicas": args.replicas, "placement": args.placement,
+                 "load_imbalance": st["load_imbalance"],
+                 "per_replica_served": {r: v["served"]
+                                        for r, v in st["replicas"].items()}}
+    else:
+        faults = {}
+        if args.faults:
+            for part in args.faults.split(","):
+                wid, t = part.split(":")
+                faults[int(wid)] = float(t)
+        scfg = simulator.SimConfig(n_workers=args.workers,
+                                   slo=args.slo_ms / 1e3,
+                                   fault_times=faults, seed=args.seed,
+                                   continuous_batching=args.continuous_batching)
+        res = simulator.simulate(arr, prof, pol, scfg)
+        extra = {}
     out = {"arch": args.arch, "policy": pol.name, "queries": len(arr),
            "continuous_batching": args.continuous_batching,
            "slo_attainment": res.slo_attainment, "mean_acc": res.mean_acc,
            "p50_latency_ms": res.latency_p50 * 1e3,
            "p99_latency_ms": res.latency_p99 * 1e3,
-           "join_rate": res.n_joins / max(len(arr), 1)}
+           "join_rate": res.n_joins / max(len(arr), 1), **extra}
     print(json.dumps(out, indent=1))
 
 

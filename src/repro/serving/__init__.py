@@ -4,4 +4,10 @@ scheduling engine (serving/engine.py: admission, EDF, policy
 invocation, continuous batching, actuation accounting, fault
 re-enqueue) behind two transports — the discrete-event simulator
 (virtual clock) and the asyncio router/worker runtime hosting a
-SubNetAct supernet (wall clock)."""
+SubNetAct supernet (wall clock).
+
+Scale-out (serving/cluster.py): N replica groups — one engine each —
+behind a ClusterCoordinator with pluggable replica placement
+(round-robin / least-loaded / power-of-two / slack-aware) and
+replica-death re-routing; both transports grow cluster counterparts
+(simulate_cluster, ClusterRouter) over one shared event loop."""

@@ -1,0 +1,417 @@
+"""Multi-replica serving plane: cluster coordinator + replica-aware
+placement (ROADMAP "serving scale-out").
+
+The paper's router (§5) schedules one worker pool; a datacenter runs
+many. This module converts the serving stack from "the engine" to "a
+set of engines behind a coordinator":
+
+  * each **replica group** runs its own, unchanged ``SchedulingEngine``
+    (EDF queue, policy invocation, continuous batching, fault
+    re-enqueue — exactly the PR 2 core, per replica);
+  * a **ClusterCoordinator** owns global admission and routes every
+    query to one replica via a pluggable ``PlacementPolicy``
+    (round-robin, least-loaded, power-of-two-choices, slack-aware);
+  * replica death drains the dead replica's EDF queue — including the
+    in-flight queries its worker faults re-enqueued — back through the
+    coordinator, which re-routes the orphans to survivors.
+
+Division of labor, extending PR 2's rule: *scheduling* logic lives in
+the engine only; *placement* logic lives in the coordinator only.
+Transports stay thin: ``drive_cluster`` below is the one discrete-event
+loop shared by the ``ClusterSimulator`` (serving/simulator.py) and the
+``ClusterRouter``'s parity mode (serving/runtime.py) — a single event
+heap across all replicas, so multi-replica schedules are exactly as
+deterministic as single-replica ones.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.engine import (EV_ARRIVAL, EV_FAULT, EV_FREE, EV_LAUNCH,
+                                  CompletionRecord, Dispatch, EngineConfig,
+                                  SchedulingEngine, VirtualClock,
+                                  completion_records)
+from repro.serving.metrics import cluster_summarize
+from repro.serving.policies import Policy
+from repro.serving.profiler import LatencyProfile
+from repro.serving.queue import Query
+
+# replica-death events carry this sentinel instead of a worker id
+ALL_WORKERS = -1
+
+
+# --------------------------------------------------------------------------
+# Placement policies
+# --------------------------------------------------------------------------
+
+
+class PlacementPolicy:
+    """Pluggable replica-selection API. ``choose`` sees the *alive*
+    replicas as ``(rid, engine)`` pairs and must return one of the
+    offered rids; engines are read-only here (introspection methods
+    ``queue_depth`` / ``inflight_depth`` / ``work_ahead`` /
+    ``projected_drain`` only — placement never touches a queue)."""
+
+    name: str = "base"
+
+    def reset(self, n_replicas: int, seed: int = 0) -> None:
+        pass
+
+    def choose(self, replicas: Sequence[Tuple[int, SchedulingEngine]],
+               q: Query, now: float) -> int:
+        raise NotImplementedError
+
+
+class RoundRobin(PlacementPolicy):
+    """Cycle through alive replicas in rid order — the classic
+    load-oblivious baseline."""
+
+    name = "round_robin"
+
+    def reset(self, n_replicas: int, seed: int = 0) -> None:
+        self._i = 0
+
+    def choose(self, replicas, q, now):
+        rid = replicas[self._i % len(replicas)][0]
+        self._i += 1
+        return rid
+
+
+class LeastLoaded(PlacementPolicy):
+    """Join the replica with the smallest total outstanding load
+    (queued + in-flight queries); ties break toward the lowest rid."""
+
+    name = "least_loaded"
+
+    def choose(self, replicas, q, now):
+        return min(replicas,
+                   key=lambda re: (re[1].queue_depth()
+                                   + re[1].inflight_depth(), re[0]))[0]
+
+
+class PowerOfTwo(PlacementPolicy):
+    """Power-of-two-choices (Mitzenmacher): sample two replicas, join
+    the less loaded — near-optimal balance at O(1) state. Seeded rng so
+    cluster schedules stay deterministic and transport-independent."""
+
+    name = "power_of_two"
+
+    def reset(self, n_replicas: int, seed: int = 0) -> None:
+        self._rng = np.random.default_rng(seed)
+
+    def choose(self, replicas, q, now):
+        if len(replicas) == 1:
+            return replicas[0][0]
+        i, j = self._rng.choice(len(replicas), size=2, replace=False)
+        a, b = replicas[int(i)], replicas[int(j)]
+        ka = (a[1].queue_depth() + a[1].inflight_depth(), a[0])
+        kb = (b[1].queue_depth() + b[1].inflight_depth(), b[0])
+        return a[0] if ka <= kb else b[0]
+
+
+class SlackAware(PlacementPolicy):
+    """Deadline-aware routing: a *tight* query (slack under
+    ``tight_mult`` fastest-service times — which covers the paper's
+    36 ms SLO regime at the default) goes to the replica that can
+    *start it* soonest (``projected_start``: in-flight work plus only
+    the EDF queue ahead of its deadline, weighted by pool capacity —
+    queued later-deadline work doesn't repel a tight query, since EDF
+    serves it first anyway); with generous slack the queue joined
+    barely matters, so relaxed queries round-robin to keep load
+    spread."""
+
+    name = "slack_aware"
+
+    def __init__(self, tight_mult: float = 10.0):
+        self.tight_mult = tight_mult
+
+    def reset(self, n_replicas: int, seed: int = 0) -> None:
+        self._i = 0
+
+    def choose(self, replicas, q, now):
+        slack = q.deadline - now
+        if slack < self.tight_mult * replicas[0][1].min_service:
+            return min(replicas,
+                       key=lambda re: (re[1].projected_start(q.deadline, now),
+                                       re[0]))[0]
+        rid = replicas[self._i % len(replicas)][0]
+        self._i += 1
+        return rid
+
+
+PLACEMENTS: Dict[str, type] = {
+    "round_robin": RoundRobin,
+    "least_loaded": LeastLoaded,
+    "power_of_two": PowerOfTwo,
+    "slack_aware": SlackAware,
+}
+
+
+def make_placement(name: str) -> PlacementPolicy:
+    try:
+        return PLACEMENTS[name]()
+    except KeyError:
+        raise ValueError(f"unknown placement {name!r}; "
+                         f"choose from {sorted(PLACEMENTS)}") from None
+
+
+# --------------------------------------------------------------------------
+# Coordinator
+# --------------------------------------------------------------------------
+
+
+class ClusterCoordinator:
+    """Global admission + replica routing over N per-replica engines.
+
+    The coordinator owns the master query list (each query admitted to
+    the cluster exactly once, however many replicas it visits after
+    deaths), the placement policy, and replica liveness. All scheduling
+    *within* a replica stays in that replica's engine."""
+
+    def __init__(self, engines: Sequence[SchedulingEngine],
+                 placement: PlacementPolicy, placement_seed: int = 0):
+        if not engines:
+            raise ValueError("a cluster needs at least one replica")
+        self.engines = list(engines)
+        self.alive: List[bool] = [True] * len(self.engines)
+        self.placement = placement
+        placement.reset(len(self.engines), seed=placement_seed)
+        self.queries: List[Query] = []      # master admission list
+
+    # -- liveness / views ----------------------------------------------
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.engines)
+
+    def alive_replicas(self) -> List[Tuple[int, SchedulingEngine]]:
+        return [(rid, e) for rid, e in enumerate(self.engines)
+                if self.alive[rid]]
+
+    # -- admission -----------------------------------------------------
+
+    def select(self, q: Query, now: float) -> int:
+        """Placement decision only: which alive replica should take
+        ``q``. The asyncio ClusterRouter admits through the chosen
+        replica's own lock, so selection and admission are split."""
+        replicas = self.alive_replicas()
+        if not replicas:
+            raise RuntimeError("no alive replicas left in the cluster")
+        return int(self.placement.choose(replicas, q, now))
+
+    def route(self, q: Query, now: float) -> int:
+        """Place an existing query on an alive replica (no master-list
+        append — the re-route path)."""
+        rid = self.select(q, now)
+        self.engines[rid].admit(q)          # stamps q.replica = rid
+        return rid
+
+    def admit(self, q: Query, now: float) -> Optional[int]:
+        """Cluster front door: record the query once and route it.
+        With every replica dead there is nowhere to route — the query
+        is dropped (recorded, never served) and None returned."""
+        self.queries.append(q)
+        if not any(self.alive):
+            q.dropped = True
+            return None
+        return self.route(q, now)
+
+    # -- replica death -------------------------------------------------
+
+    def should_decommission(self, rid: int) -> bool:
+        """THE decommission rule, stated once for both transports: an
+        alive replica whose worker pool is gone can never serve again —
+        leave it routable and it black-holes every query placed on
+        it."""
+        return self.alive[rid] and not self.engines[rid].worker_model
+
+    def fail_replica(self, rid: int, now: float) -> List[Tuple[Query, int]]:
+        """Replica ``rid`` died: fault every worker (re-enqueueing its
+        in-flight queries through the engine's own fault path), then
+        drain the replica's queue back through placement. Returns the
+        re-routed ``(query, new_rid)`` pairs, in EDF order."""
+        eng = self.engines[rid]
+        for wid in list(eng.worker_model):
+            eng.fault(wid)
+        return self.redistribute(rid, now)
+
+    def redistribute(self, rid: int, now: float) -> List[Tuple[Query, int]]:
+        """Drain-and-re-route the (already worker-faulted) replica's
+        queue; used directly by the asyncio ClusterRouter, whose
+        ``kill_worker`` handles the per-worker fault bookkeeping. When
+        the whole cluster is dead the orphans are dropped instead."""
+        self.alive[rid] = False
+        orphans = self.engines[rid].surrender_queue()
+        if not any(self.alive):
+            for q in orphans:
+                q.dropped = True
+            return []
+        return [(q, self.route(q, now)) for q in orphans]
+
+    # -- accounting ----------------------------------------------------
+
+    def abandon_pending(self) -> List[Query]:
+        out: List[Query] = []
+        for eng in self.engines:
+            out.extend(eng.abandon_pending())
+        return out
+
+    def records(self) -> List[CompletionRecord]:
+        return completion_records(self.queries)
+
+    def stats(self) -> Dict[str, float]:
+        return cluster_summarize(
+            self.queries, n_replicas=self.n_replicas,
+            n_joins=sum(e.n_joins for e in self.engines))
+
+
+# --------------------------------------------------------------------------
+# Shared discrete-event loop (virtual time, all replicas on one heap)
+# --------------------------------------------------------------------------
+
+
+def drive_cluster(coord: ClusterCoordinator, queries: Sequence[Query],
+                  worker_ids: Dict[int, Iterable[int]],
+                  replica_deaths: Optional[Dict[int, float]] = None,
+                  fault_times: Optional[Dict[Tuple[int, int], float]] = None,
+                  clock: Optional[VirtualClock] = None,
+                  service_fn=None) -> None:
+    """Run the whole cluster to quiescence under one virtual clock.
+
+    The multi-replica analogue of ``engine.drive``: ONE event heap
+    ordered ``(t, kind, rid, ident)`` spans every replica, so
+    simultaneous events across replicas resolve deterministically and a
+    1-replica cluster replays the single-engine loop event-for-event.
+    ``service_fn(rid, dispatch, now) -> latency`` optionally perturbs
+    the engine's expected service time (simulator stragglers).
+    Replica deaths enter as FAULT events with the ``ALL_WORKERS``
+    sentinel; per-worker faults as ``(rid, wid)``.
+    """
+    events: List = [(q.arrival, EV_ARRIVAL, 0, q.qid) for q in queries]
+    for rid, t in (replica_deaths or {}).items():
+        events.append((float(t), EV_FAULT, int(rid), ALL_WORKERS))
+    for (rid, wid), t in (fault_times or {}).items():
+        events.append((float(t), EV_FAULT, int(rid), int(wid)))
+    heapq.heapify(events)
+    idle: Dict[int, List[int]] = {rid: list(wids)
+                                  for rid, wids in worker_ids.items()}
+    dead_workers: set = set()               # (rid, wid)
+    qmap = {q.qid: q for q in queries}
+
+    def push(t: float, kind: int, rid: int, ident: int) -> None:
+        heapq.heappush(events, (t, kind, rid, ident))
+
+    def start(rid: int, d: Dispatch, now: float) -> None:
+        eng = coord.engines[rid]
+        eng.launch(d, now)
+        lat = d.service if service_fn is None else service_fn(rid, d, now)
+        d.t_finish = now + lat
+        push(d.t_finish, EV_FREE, rid, d.wid)
+
+    def dispatch_all(rid: int, now: float) -> None:
+        eng = coord.engines[rid]
+        free = idle[rid]
+        while free and len(eng.edf):
+            wid = free.pop(0)
+            d = eng.next_dispatch(wid, now)
+            if d is None:
+                free.insert(0, wid)
+                break
+            if d.open:
+                push(d.launch_at, EV_LAUNCH, rid, wid)
+            else:
+                start(rid, d, now)
+        for d in eng.try_join(now):
+            start(rid, d, now)
+
+    while events:
+        now, kind, rid, ident = heapq.heappop(events)
+        if clock is not None:
+            clock.advance_to(now)
+        if kind == EV_ARRIVAL:
+            target = coord.admit(qmap[ident], now)
+            if target is not None:      # None: whole cluster dead, dropped
+                dispatch_all(target, now)
+        elif kind == EV_FREE:
+            if (rid, ident) in dead_workers or not coord.alive[rid]:
+                continue
+            eng = coord.engines[rid]
+            d = eng.inflight.get(ident)
+            if d is not None and d.launched:
+                eng.complete(d, d.t_finish)
+            elif d is not None and not d.queries:
+                eng.inflight.pop(ident, None)
+            idle[rid].append(ident)
+            dispatch_all(rid, now)
+        elif kind == EV_LAUNCH:
+            d = coord.engines[rid].open_batches.get(ident)
+            if (d is not None and not d.launched and not d.faulted
+                    and d.launch_at == now):
+                start(rid, d, now)
+        elif kind == EV_FAULT:
+            if ident == ALL_WORKERS:        # whole replica dies
+                for wid in list(idle[rid]) + [
+                        w for w in coord.engines[rid].worker_model]:
+                    dead_workers.add((rid, wid))
+                idle[rid].clear()
+                coord.fail_replica(rid, now)
+                # orphans were re-routed through placement: wake every
+                # surviving replica, in rid order, deterministically
+                for other, _ in coord.alive_replicas():
+                    dispatch_all(other, now)
+            else:
+                dead_workers.add((rid, ident))
+                if ident in idle[rid]:
+                    idle[rid].remove(ident)
+                coord.engines[rid].fault(ident)
+                if coord.should_decommission(rid):
+                    # last worker gone: re-route the queue (incl. the
+                    # just-re-enqueued batch) to survivors
+                    coord.redistribute(rid, now)
+                    for other, _ in coord.alive_replicas():
+                        dispatch_all(other, now)
+                elif coord.alive[rid]:
+                    dispatch_all(rid, now)
+
+
+# --------------------------------------------------------------------------
+# Construction helpers
+# --------------------------------------------------------------------------
+
+
+def replica_worker_counts(n_replicas: int,
+                          workers_per_replica) -> List[int]:
+    """Normalize an int (homogeneous) or per-replica sequence
+    (heterogeneous pools — where load-aware placement earns its keep)
+    into one worker count per replica."""
+    if n_replicas < 1:
+        raise ValueError("n_replicas must be >= 1")
+    if isinstance(workers_per_replica, int):
+        counts = [workers_per_replica] * n_replicas
+    else:
+        counts = [int(w) for w in workers_per_replica]
+        if len(counts) != n_replicas:
+            raise ValueError(f"{len(counts)} worker counts for "
+                             f"{n_replicas} replicas")
+    if any(c < 1 for c in counts):
+        raise ValueError("every replica needs at least one worker")
+    return counts
+
+
+def build_engines(profile: LatencyProfile, policy: Policy,
+                  n_replicas: int, workers_per_replica,
+                  cfg: Optional[EngineConfig] = None
+                  ) -> List[SchedulingEngine]:
+    """One engine per replica group, each with a *cloned* policy (per-
+    replica policy state never couples replicas) and its own worker-id
+    space 0..k-1. ``workers_per_replica`` is an int or a per-replica
+    sequence."""
+    counts = replica_worker_counts(n_replicas, workers_per_replica)
+    return [SchedulingEngine(profile, policy.clone(),
+                             cfg or EngineConfig(),
+                             worker_ids=range(counts[rid]),
+                             replica_id=rid)
+            for rid in range(n_replicas)]

@@ -106,6 +106,7 @@ class DispatchRecord:
     acc: float
     latency: float
     queue_len: int
+    replica: int = 0
 
 
 @dataclass(frozen=True)
@@ -118,11 +119,12 @@ class CompletionRecord:
     finish: Optional[float]
     served_acc: Optional[float]
     dropped: bool
+    replica: int = 0
 
 
 def completion_records(queries: Iterable[Query]) -> List[CompletionRecord]:
     return [CompletionRecord(q.qid, q.arrival, q.deadline, q.finish,
-                             q.served_acc, q.dropped)
+                             q.served_acc, q.dropped, q.replica)
             for q in sorted(queries, key=lambda q: q.qid)]
 
 
@@ -133,11 +135,13 @@ class SchedulingEngine:
     def __init__(self, profile: LatencyProfile, policy: Policy,
                  cfg: Optional[EngineConfig] = None,
                  worker_ids: Iterable[int] = (),
-                 on_drop: Optional[Callable[[Query], None]] = None):
+                 on_drop: Optional[Callable[[Query], None]] = None,
+                 replica_id: int = 0):
         self.profile = profile
         self.policy = policy
         self.cfg = cfg or EngineConfig()
         self.on_drop = on_drop
+        self.replica_id = int(replica_id)
         policy.reset()
         self.min_service = float(profile.lat.min())
         self.edf = EDFQueue()
@@ -153,6 +157,7 @@ class SchedulingEngine:
     # -- admission -----------------------------------------------------
 
     def admit(self, q: Query) -> None:
+        q.replica = self.replica_id
         self.queries.append(q)
         self.edf.push(q)
 
@@ -315,7 +320,8 @@ class SchedulingEngine:
         d.launched = True
         self.open_batches.pop(d.wid, None)
         self.dispatches.append(DispatchRecord(now, d.wid, eff_b, d.pareto_idx,
-                                              d.acc, lat, len(self.edf)))
+                                              d.acc, lat, len(self.edf),
+                                              replica=self.replica_id))
         return d
 
     def complete(self, d: Dispatch, finish: float) -> List[Query]:
@@ -345,6 +351,55 @@ class SchedulingEngine:
             q.served_acc = None
             self.edf.push(q)
         return d.queries
+
+    def surrender_queue(self) -> List[Query]:
+        """Hand every queued query back, most urgent first, without
+        marking anything dropped (replica-death path: the coordinator
+        re-routes the orphans to surviving replicas). Call after
+        ``fault()`` has pushed in-flight queries back into the queue so
+        they are surrendered too."""
+        return self.edf.drain()
+
+    # -- placement introspection ---------------------------------------
+    # Read-only views the cluster coordinator's placement policies use;
+    # never consulted by the engine's own scheduling path.
+
+    def queue_depth(self) -> int:
+        return len(self.edf)
+
+    def inflight_depth(self) -> int:
+        """Queries currently bound to workers (forming or executing)."""
+        return sum(len(d.queries) for d in self.inflight.values())
+
+    def work_ahead(self, deadline: float) -> int:
+        """Queued queries that EDF would serve before an arrival with
+        ``deadline``."""
+        return self.edf.count_more_urgent(deadline)
+
+    def projected_start(self, deadline: float, now: float) -> float:
+        """Deterministic estimate (s) of when an arrival with
+        ``deadline`` could start on this replica: remaining in-flight
+        service plus the EDF work *ahead of it* (queued queries with
+        later deadlines would be served after it, so they don't delay
+        it) at the fastest control choice, spread over the worker pool.
+        An optimistic lower bound — placement only needs a consistent
+        relative ordering across replicas, not truth."""
+        busy = 0.0
+        for d in self.inflight.values():
+            if d.t_finish is not None:
+                busy += max(0.0, d.t_finish - now)
+            elif d.service is not None:
+                busy += d.service
+            else:
+                busy += self.min_service
+        ahead = self.work_ahead(deadline) * self.min_service
+        return (busy + ahead) / max(len(self.worker_model), 1)
+
+    def projected_drain(self, now: float) -> float:
+        """Estimate (s) of when this replica would drain ALL queued +
+        in-flight work (the start estimate for an arrival behind
+        everything)."""
+        return self.projected_start(float("inf"), now)
 
     # -- accounting ----------------------------------------------------
 

@@ -1,6 +1,11 @@
 """Success metrics (paper §6.1): SLO attainment (R1) and mean serving
 accuracy over SLO-satisfying queries (R2), plus end-to-end latency
-percentiles and continuous-batching join counters."""
+percentiles, continuous-batching join counters, and cluster-level
+per-replica / load-imbalance aggregation.
+
+Every function is total: empty or all-dropped query sets yield
+well-defined finite values (0.0 for latency percentiles and
+imbalance), never NaN or a ZeroDivisionError."""
 from __future__ import annotations
 
 from typing import Dict, Iterable, List, Sequence, Tuple
@@ -39,7 +44,7 @@ def latency_percentiles(queries: Sequence[Query],
     lats = [q.finish - q.arrival for q in queries
             if q.finish is not None and not q.dropped]
     if not lats:
-        return [float("nan")] * len(ps)
+        return [0.0] * len(ps)                # total on empty/all-dropped
     return [float(np.percentile(lats, p)) for p in ps]
 
 
@@ -57,3 +62,42 @@ def summarize(queries: Sequence[Query], n_joins: int = 0) -> Dict[str, float]:
         "p99_latency_s": p99,
         "join_rate": n_joins / len(queries) if len(queries) else 0.0,
     }
+
+
+# --------------------------------------------------------------------------
+# Cluster aggregation (multi-replica serving plane)
+# --------------------------------------------------------------------------
+
+
+def per_replica_stats(queries: Sequence[Query]) -> Dict[int, Dict[str, float]]:
+    """``summarize`` per replica group (keyed by the replica that last
+    admitted each query — re-routed queries count where they landed)."""
+    by_rid: Dict[int, List[Query]] = {}
+    for q in queries:
+        by_rid.setdefault(q.replica, []).append(q)
+    return {rid: summarize(qs) for rid, qs in sorted(by_rid.items())}
+
+
+def load_imbalance(queries: Sequence[Query],
+                   n_replicas: int = 0) -> float:
+    """Placement-quality metric: max/mean − 1 of per-replica query
+    counts (0.0 = perfectly balanced; 0.0 on empty sets). ``n_replicas``
+    forces the denominator so replicas that received nothing count."""
+    if not queries:
+        return 0.0
+    counts: Dict[int, int] = {}
+    for q in queries:
+        counts[q.replica] = counts.get(q.replica, 0) + 1
+    n = max(n_replicas, len(counts), 1)
+    mean = len(queries) / n
+    return max(counts.values()) / mean - 1.0 if mean > 0 else 0.0
+
+
+def cluster_summarize(queries: Sequence[Query], n_replicas: int = 0,
+                      n_joins: int = 0) -> Dict[str, float]:
+    """Aggregate serving report plus the load-imbalance metric; the
+    per-replica breakdown rides under the ``replicas`` key."""
+    out = summarize(queries, n_joins=n_joins)
+    out["load_imbalance"] = load_imbalance(queries, n_replicas)
+    out["replicas"] = per_replica_stats(queries)
+    return out

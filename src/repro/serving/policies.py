@@ -49,6 +49,13 @@ class Policy:
     def reset(self) -> None:  # per-run state, if any
         pass
 
+    def clone(self) -> "Policy":
+        """Fresh instance with the same configuration. Each replica's
+        engine owns its own policy object (engines reset and may mutate
+        policy state), so a cluster clones the prototype per replica —
+        shared mutable policy state must never couple replicas."""
+        return type(self)()
+
 
 class SlackFit(Policy):
     """Bucketed slack-fitting (paper §4.2): pick the latency bucket
@@ -113,6 +120,9 @@ class ClipperFixed(Policy):
     def __init__(self, pareto_idx: int, label: Optional[str] = None):
         self.pareto_idx = pareto_idx
         self.name = label or f"clipper+({pareto_idx})"
+
+    def clone(self) -> "ClipperFixed":
+        return ClipperFixed(self.pareto_idx, self.name)
 
     def choose(self, profile, slack, queue_len):
         cap = profile.cap_batch_idx(queue_len)

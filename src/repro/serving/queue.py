@@ -14,6 +14,9 @@ class Query:
     seq: int = field(compare=True)          # FIFO tie-break
     arrival: float = field(compare=False, default=0.0)
     qid: int = field(compare=False, default=0)
+    # replica group that (last) admitted the query; stamped by the
+    # engine so completion records carry serving placement
+    replica: int = field(compare=False, default=0)
     # filled at completion
     finish: Optional[float] = field(compare=False, default=None)
     served_acc: Optional[float] = field(compare=False, default=None)
@@ -51,6 +54,12 @@ class EDFQueue:
     def drain(self) -> List[Query]:
         """Dequeue everything, most urgent first (router shutdown)."""
         return self.pop_batch(len(self._heap))
+
+    def count_more_urgent(self, deadline: float) -> int:
+        """Queries that would be served before a hypothetical arrival
+        with ``deadline`` (EDF order). O(n) heap scan — placement
+        introspection only, never on the per-query scheduling path."""
+        return sum(1 for q in self._heap if q.deadline <= deadline)
 
     def drop_expired(self, now: float, min_service: float) -> List[Query]:
         """Drop queries that cannot possibly meet their deadline even at

@@ -12,6 +12,11 @@ re-enqueued and re-served by survivors, mirroring the simulator).
 For deterministic tests, ``Router.run_virtual`` drives the *same*
 engine on a ``VirtualClock`` through the shared event loop — the
 parity path proving router and simulator schedule identically.
+
+Scale-out: a ``Router`` is the single-replica transport; the
+``ClusterRouter`` below composes N of them behind one asyncio front
+door, with placement delegated to ``serving/cluster.py``'s coordinator
+(and a matching ``run_virtual`` cluster parity path).
 """
 from __future__ import annotations
 
@@ -22,6 +27,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.serving.cluster import (ClusterCoordinator, drive_cluster,
+                                   make_placement)
 from repro.serving.engine import (CompletionRecord, Dispatch, EngineConfig,
                                   SchedulingEngine, VirtualClock, WallClock,
                                   drive)
@@ -58,14 +65,16 @@ class Router:
 
     def __init__(self, profile: LatencyProfile, policy: Policy,
                  workers: Sequence[WorkerHandle],
-                 clock=None, engine_cfg: Optional[EngineConfig] = None):
+                 clock=None, engine_cfg: Optional[EngineConfig] = None,
+                 replica_id: int = 0):
         self.profile = profile
         self.policy = policy
         self.workers = list(workers)
         self.clock = clock if clock is not None else WallClock()
         self.engine = SchedulingEngine(
             profile, policy, engine_cfg or EngineConfig(),
-            worker_ids=[w.wid for w in self.workers], on_drop=self._on_drop)
+            worker_ids=[w.wid for w in self.workers], on_drop=self._on_drop,
+            replica_id=replica_id)
         self._payloads: Dict[int, ServedQuery] = {}
         self._idle: List[WorkerHandle] = []
         self._open_events: Dict[int, asyncio.Event] = {}
@@ -92,22 +101,40 @@ class Router:
         self._idle = [w for w in self.workers if w.alive]
         self._task = asyncio.create_task(self._schedule_loop())
 
-    async def submit(self, payload: Any, slo_s: float) -> asyncio.Future:
+    async def submit(self, payload: Any, slo_s: float,
+                     qid: Optional[int] = None) -> asyncio.Future:
+        """Enqueue one query. ``qid`` lets a cluster front door assign
+        globally-unique ids; standalone routers number locally."""
         now = self.clock.now()
-        q = Query(deadline=now + slo_s, seq=0, arrival=now, qid=self._qid)
-        self._qid += 1
+        if qid is None:
+            qid = self._qid
+            self._qid += 1
+        q = Query(deadline=now + slo_s, seq=0, arrival=now, qid=qid)
+        return await self.submit_query(q, payload)
+
+    async def submit_query(self, q: Query, payload: Any) -> asyncio.Future:
+        """Admit a pre-built query to *this* replica (the ClusterRouter
+        places the query first, then hands it to the chosen replica)."""
+        now = self.clock.now()
         sq = ServedQuery(q, payload, asyncio.get_running_loop().create_future())
         self._payloads[q.qid] = sq
         async with self._work:
             self.engine.admit(q)
             if not self._idle:
                 # no idle capacity: the query may join a forming batch
-                for d in self.engine.try_join(now):
-                    ev = self._open_events.get(d.wid)
-                    if ev is not None:
-                        ev.set()        # batch filled/urgent: launch now
+                self.offer_joins()
             self._work.notify_all()
         return sq.done
+
+    def offer_joins(self):
+        """Offer queued queries to open forming batches (continuous
+        batching), launching any batch that fills or turns urgent. Also
+        called after a cluster migration lands queries in this
+        replica's queue."""
+        for d in self.engine.try_join(self.clock.now()):
+            ev = self._open_events.get(d.wid)
+            if ev is not None:
+                ev.set()                # batch filled/urgent: launch now
 
     def kill_worker(self, wid: int):
         """Fault injection: worker stops accepting batches (heartbeat
@@ -263,6 +290,154 @@ class Router:
               [w.wid for w in self.workers if w.alive],
               fault_times=fault_times, clock=self.clock)
         return self.engine.records()
+
+
+# --------------------------------------------------------------------------
+# Cluster front door: N single-replica Routers behind one coordinator
+# --------------------------------------------------------------------------
+
+
+class ClusterRouter:
+    """Asyncio multi-replica serving plane.
+
+    Each replica group is a full ``Router`` (one engine, its own worker
+    pool, its own schedule loop); this class is the single front door
+    that places every incoming query on one replica via the cluster
+    coordinator's ``PlacementPolicy`` and fans ``submit`` out to the
+    chosen replica. Placement logic lives in the coordinator only;
+    scheduling stays inside each replica's engine (the PR 2 rule,
+    extended).
+
+    Replica death (``kill_replica``) kills every worker in the group —
+    re-enqueueing its in-flight queries through the engine's own fault
+    path — then drains the dead replica's queue back through the
+    coordinator, which re-routes the orphans (payloads and futures
+    travel with them) to surviving replicas.
+    """
+
+    def __init__(self, profile: LatencyProfile, policy: Policy,
+                 replicas: Sequence[Sequence[WorkerHandle]],
+                 clock=None, engine_cfg: Optional[EngineConfig] = None,
+                 placement: str = "round_robin", placement_seed: int = 0):
+        self.profile = profile
+        self.clock = clock if clock is not None else WallClock()
+        self.routers = [
+            Router(profile, policy.clone(), group, clock=self.clock,
+                   engine_cfg=engine_cfg, replica_id=rid)
+            for rid, group in enumerate(replicas)]
+        self.coord = ClusterCoordinator(
+            [r.engine for r in self.routers], make_placement(placement),
+            placement_seed=placement_seed)
+        self._qid = 0
+
+    # -- async serving path ---------------------------------------------
+
+    async def start(self):
+        for r in self.routers:
+            await r.start()
+
+    async def submit(self, payload: Any, slo_s: float) -> asyncio.Future:
+        now = self.clock.now()
+        q = Query(deadline=now + slo_s, seq=0, arrival=now, qid=self._qid)
+        self._qid += 1
+        self.coord.queries.append(q)
+        if not any(self.coord.alive):
+            # coordinator semantics (cluster.py admit): nowhere to
+            # route — record the query and resolve it as dropped
+            q.dropped = True
+            fut = asyncio.get_running_loop().create_future()
+            fut.set_result((None, 0.0))
+            return fut
+        rid = self.coord.select(q, now)
+        fut = await self.routers[rid].submit_query(q, payload)
+        if not self.coord.alive[rid]:
+            # the replica died between placement and admission (the
+            # await may suspend on the replica's lock): pull the
+            # just-admitted query back out and re-route it
+            self._rescue(rid)
+        return fut
+
+    def kill_worker(self, rid: int, wid: int):
+        self.routers[rid].kill_worker(wid)
+        if self.coord.should_decommission(rid):
+            self._rescue(rid)
+
+    def kill_replica(self, rid: int):
+        """Whole replica group dies: fault every worker, then re-route
+        its queued + re-enqueued queries (with their payloads/futures)
+        to survivors through the placement policy."""
+        r = self.routers[rid]
+        for w in list(r.workers):
+            r.kill_worker(w.wid)        # may already _rescue on the last
+        if self.coord.alive[rid]:
+            self._rescue(rid)
+
+    def _rescue(self, rid: int):
+        """Drain replica ``rid``'s queue back through the coordinator
+        (marking it dead), migrating payloads and futures to the
+        re-routed replicas. Safe to call again on an already-dead
+        replica — the late-admission race in ``submit`` needs exactly
+        that to re-route a query that landed after the death."""
+        r = self.routers[rid]
+        moved = self.coord.redistribute(rid, self.clock.now())
+        woken = set()
+        for q, target in moved:
+            sq = r._payloads.pop(q.qid, None)
+            if sq is not None:
+                self.routers[target]._payloads[q.qid] = sq
+            woken.add(target)
+        # total-cluster death: redistribute dropped the orphans — their
+        # futures must still resolve
+        for q in list(r.engine.queries):
+            if q.dropped:
+                sq = r._payloads.pop(q.qid, None)
+                if sq is not None and not sq.done.done():
+                    sq.done.set_result((None, 0.0))
+        for target in woken:
+            tr = self.routers[target]
+            if not tr._idle:
+                # migrated queries may join a survivor's forming batch
+                # (mirrors submit_query and drive_cluster's
+                # dispatch-after-redistribute)
+                tr.offer_joins()
+        try:
+            loop = asyncio.get_running_loop()
+            for target in woken:
+                loop.create_task(self.routers[target]._notify())
+        except RuntimeError:
+            pass                        # no loop: nothing to wake
+
+    async def drain(self, timeout: float = 10.0):
+        await asyncio.gather(*(r.drain(timeout) for r in self.routers))
+
+    def stats(self) -> Dict[str, float]:
+        return self.coord.stats()
+
+    def records(self) -> List[CompletionRecord]:
+        return self.coord.records()
+
+    # -- deterministic parity path --------------------------------------
+
+    def run_virtual(self, arrivals: Sequence[float], slo_s: float,
+                    replica_deaths: Optional[Dict[int, float]] = None,
+                    fault_times: Optional[Dict[tuple, float]] = None
+                    ) -> List[CompletionRecord]:
+        """Drive the whole cluster to quiescence on its VirtualClock
+        through the shared event loop in serving/cluster.py — the
+        parity path proving ClusterRouter and ClusterSimulator place
+        and schedule identically."""
+        if not isinstance(self.clock, VirtualClock):
+            raise TypeError("run_virtual requires a VirtualClock cluster")
+        queries = [Query(deadline=float(t) + slo_s, seq=i,
+                         arrival=float(t), qid=i)
+                   for i, t in enumerate(arrivals)]
+        drive_cluster(
+            self.coord, queries,
+            {rid: [w.wid for w in r.workers if w.alive]
+             for rid, r in enumerate(self.routers)},
+            replica_deaths=replica_deaths, fault_times=fault_times,
+            clock=self.clock)
+        return self.coord.records()
 
 
 def make_supernet_workers(n: int, step_fn: Callable[[int, Any], Any],

@@ -9,19 +9,29 @@ simulation-specific service model: per-batch latency from the profiler,
 stragglers with optional backup-batch hedging, and worker fault events.
 The asyncio runtime (serving/runtime.py) drives the *same* engine under
 wall clock with real JAX workers.
+
+Multi-replica: ``simulate_cluster`` runs N replica groups (one engine
+each) behind a ``ClusterCoordinator`` on the single shared event loop
+in ``serving/cluster.py`` — placement decisions live in the
+coordinator, scheduling stays per-replica, and the whole cluster is as
+deterministic as one engine.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.serving.cluster import (ClusterCoordinator, build_engines,
+                                   drive_cluster, make_placement,
+                                   replica_worker_counts)
 from repro.serving.engine import (EV_FREE, CompletionRecord, DispatchRecord,
                                   Dispatch, EngineConfig, SchedulingEngine,
                                   completion_records, drive)
-from repro.serving.metrics import (latency_percentiles, mean_serving_accuracy,
-                                   slo_attainment, summarize)
+from repro.serving.metrics import (cluster_summarize, latency_percentiles,
+                                   mean_serving_accuracy, slo_attainment,
+                                   summarize)
 from repro.serving.profiler import (SUBNETACT_ACTUATION_S, HardwareProfile,
                                     LatencyProfile, RTX2080TI)
 from repro.serving.policies import Policy
@@ -134,3 +144,100 @@ def simulate(arrivals: Sequence[float], profile: LatencyProfile,
     return SimResult(queries=queries, dispatches=engine.dispatches,
                      duration=duration, n_joins=engine.n_joins,
                      n_open_batches=engine.n_open_batches)
+
+
+# --------------------------------------------------------------------------
+# Cluster simulation (N replica groups behind one coordinator)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ClusterConfig:
+    """Knobs for the multi-replica plane; per-replica scheduling knobs
+    mirror ``SimConfig`` (stragglers/hedging stay single-replica sim
+    features for now — the cluster service model is the engine's)."""
+
+    n_replicas: int = 2
+    # int (homogeneous) or per-replica sequence (heterogeneous pools)
+    workers_per_replica: object = 4
+    placement: str = "round_robin"
+    placement_seed: int = 0
+    slo: float = 0.036
+    actuation_delay: float = SUBNETACT_ACTUATION_S
+    load_on_switch: bool = False
+    hw: HardwareProfile = RTX2080TI
+    drop_infeasible: bool = True
+    continuous_batching: bool = False
+    max_join_window: float = 0.25
+    # fault injection: whole replicas and/or single workers
+    replica_deaths: Dict[int, float] = field(default_factory=dict)
+    fault_times: Dict[Tuple[int, int], float] = field(default_factory=dict)
+
+    def engine_config(self) -> EngineConfig:
+        return EngineConfig(actuation_delay=self.actuation_delay,
+                            load_on_switch=self.load_on_switch, hw=self.hw,
+                            drop_infeasible=self.drop_infeasible,
+                            continuous_batching=self.continuous_batching,
+                            max_join_window=self.max_join_window)
+
+
+@dataclass
+class ClusterResult:
+    queries: List[Query]                    # master list, cluster order
+    dispatches: List[DispatchRecord]        # all replicas, time order
+    duration: float
+    n_replicas: int
+    n_joins: int = 0
+
+    @property
+    def slo_attainment(self) -> float:
+        return slo_attainment(self.queries)
+
+    @property
+    def mean_acc(self) -> float:
+        return mean_serving_accuracy(self.queries)
+
+    @property
+    def latency_p50(self) -> float:
+        return latency_percentiles(self.queries)[0]
+
+    @property
+    def latency_p99(self) -> float:
+        return latency_percentiles(self.queries)[1]
+
+    @property
+    def records(self) -> List[CompletionRecord]:
+        return completion_records(self.queries)
+
+    def stats(self) -> Dict[str, float]:
+        return cluster_summarize(self.queries, n_replicas=self.n_replicas,
+                                 n_joins=self.n_joins)
+
+
+def simulate_cluster(arrivals: Sequence[float], profile: LatencyProfile,
+                     policy: Policy, ccfg: ClusterConfig) -> ClusterResult:
+    """Virtual-clock cluster simulation: one coordinator, N per-replica
+    engines (the prototype ``policy`` is cloned per replica), a single
+    shared event heap. A 1-replica cluster replays ``simulate``'s
+    schedule record-for-record (guarded by tests/test_cluster.py)."""
+    queries = [Query(deadline=float(t) + ccfg.slo, seq=i,
+                     arrival=float(t), qid=i)
+               for i, t in enumerate(arrivals)]
+    duration = (float(arrivals[-1]) if len(arrivals) else 0.0) + 4 * ccfg.slo
+
+    counts = replica_worker_counts(ccfg.n_replicas, ccfg.workers_per_replica)
+    engines = build_engines(profile, policy, ccfg.n_replicas, counts,
+                            ccfg.engine_config())
+    coord = ClusterCoordinator(engines, make_placement(ccfg.placement),
+                               placement_seed=ccfg.placement_seed)
+    drive_cluster(coord, queries,
+                  {rid: range(counts[rid])
+                   for rid in range(ccfg.n_replicas)},
+                  replica_deaths=ccfg.replica_deaths,
+                  fault_times=ccfg.fault_times)
+
+    dispatches = sorted((d for e in engines for d in e.dispatches),
+                        key=lambda d: (d.t, d.replica, d.worker))
+    return ClusterResult(queries=coord.queries, dispatches=dispatches,
+                         duration=duration, n_replicas=ccfg.n_replicas,
+                         n_joins=sum(e.n_joins for e in engines))

@@ -1,0 +1,328 @@
+"""Multi-replica serving plane: ClusterRouter/ClusterSimulator parity
+for every placement policy (incl. replica death), single-replica
+equivalence with the pre-cluster engine, placement semantics, and the
+asyncio cluster front door."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving import cluster, policies, profiler, simulator, traces
+from repro.serving.engine import EngineConfig, SchedulingEngine, VirtualClock
+from repro.serving.queue import Query
+from repro.serving.runtime import ClusterRouter, WorkerHandle
+
+PROF = profiler.build_profile(get_config("ofa_resnet"))
+ARR = traces.bursty_trace(400, 1600, 4, 2.0, seed=23)
+
+
+def _groups(n_replicas, workers_per_replica):
+    return [[WorkerHandle(wid=i, run=lambda idx, p: np.zeros(len(p)))
+             for i in range(workers_per_replica)]
+            for _ in range(n_replicas)]
+
+
+def _virtual_cluster(n_replicas, workers_per_replica, placement,
+                     continuous=False):
+    return ClusterRouter(
+        PROF, policies.SlackFit(), _groups(n_replicas, workers_per_replica),
+        clock=VirtualClock(), placement=placement,
+        engine_cfg=EngineConfig(continuous_batching=continuous))
+
+
+class TestClusterParity:
+    """Acceptance: ClusterRouter (virtual clock) and ClusterSimulator
+    produce identical per-query completion records for every placement
+    policy, including a replica-death scenario — both are transports
+    over the same coordinator + engines."""
+
+    @pytest.mark.parametrize("placement", sorted(cluster.PLACEMENTS))
+    def test_parity_with_replica_death(self, placement):
+        deaths = {1: 0.8}
+        ccfg = simulator.ClusterConfig(
+            n_replicas=3, workers_per_replica=2, placement=placement,
+            slo=0.036, replica_deaths=deaths)
+        sim = simulator.simulate_cluster(ARR, PROF, policies.SlackFit(), ccfg)
+        router = _virtual_cluster(3, 2, placement)
+        recs = router.run_virtual(ARR, slo_s=0.036, replica_deaths=deaths)
+        assert len(recs) == len(ARR)
+        assert recs == sim.records
+        assert router.stats()["slo_attainment"] == sim.slo_attainment
+
+    def test_parity_with_continuous_batching(self):
+        ccfg = simulator.ClusterConfig(
+            n_replicas=2, workers_per_replica=2, placement="round_robin",
+            slo=0.036, continuous_batching=True)
+        sim = simulator.simulate_cluster(ARR, PROF, policies.SlackFit(), ccfg)
+        router = _virtual_cluster(2, 2, "round_robin", continuous=True)
+        assert router.run_virtual(ARR, slo_s=0.036) == sim.records
+        assert (sum(e.n_joins for e in router.coord.engines) == sim.n_joins)
+
+    def test_parity_with_worker_level_fault(self):
+        faults = {(0, 1): 0.5}
+        ccfg = simulator.ClusterConfig(
+            n_replicas=2, workers_per_replica=2, placement="least_loaded",
+            slo=0.036, fault_times=faults)
+        sim = simulator.simulate_cluster(ARR, PROF, policies.SlackFit(), ccfg)
+        router = _virtual_cluster(2, 2, "least_loaded")
+        recs = router.run_virtual(ARR, slo_s=0.036, fault_times=faults)
+        assert recs == sim.records
+
+
+class TestSingleReplicaUnchanged:
+    """A 1-replica cluster replays the pre-refactor single-engine
+    schedule record-for-record (the --replicas 1 guarantee; the plain
+    router/simulator parity test in test_engine.py guards the engine
+    itself)."""
+
+    def test_cluster_of_one_matches_plain_simulate(self):
+        res = simulator.simulate(ARR, PROF, policies.SlackFit(),
+                                 simulator.SimConfig(n_workers=4, slo=0.036))
+        cres = simulator.simulate_cluster(
+            ARR, PROF, policies.SlackFit(),
+            simulator.ClusterConfig(n_replicas=1, workers_per_replica=4,
+                                    slo=0.036))
+        assert cres.records == res.records
+        assert [(d.t, d.worker, d.batch, d.pareto_idx)
+                for d in cres.dispatches] == \
+               [(d.t, d.worker, d.batch, d.pareto_idx)
+                for d in res.dispatches]
+
+    def test_cluster_of_one_with_continuous_batching(self):
+        res = simulator.simulate(
+            ARR, PROF, policies.SlackFit(),
+            simulator.SimConfig(n_workers=3, slo=0.036,
+                                continuous_batching=True))
+        cres = simulator.simulate_cluster(
+            ARR, PROF, policies.SlackFit(),
+            simulator.ClusterConfig(n_replicas=1, workers_per_replica=3,
+                                    slo=0.036, continuous_batching=True))
+        assert cres.records == res.records
+
+
+class TestReplicaDeath:
+    def test_orphans_rerouted_and_conserved(self):
+        """Every query resolves exactly once even when a replica dies
+        mid-trace; the dead replica serves nothing after death."""
+        deaths = {0: 0.5}
+        ccfg = simulator.ClusterConfig(
+            n_replicas=3, workers_per_replica=2, placement="round_robin",
+            slo=0.036, replica_deaths=deaths)
+        res = simulator.simulate_cluster(ARR, PROF, policies.SlackFit(), ccfg)
+        assert len(res.queries) == len(ARR)
+        served = sum(1 for q in res.queries
+                     if q.finish is not None and not q.dropped)
+        dropped = sum(1 for q in res.queries if q.dropped)
+        assert served + dropped == len(ARR)
+        # nothing completes on the dead replica after its death
+        assert all(q.replica != 0 for q in res.queries
+                   if q.finish is not None and q.finish > 0.5)
+        # and some queries originally placed on 0 were re-served elsewhere
+        assert any(q.replica != 0 for q in res.queries)
+
+    def test_all_workers_faulted_decommissions_replica(self):
+        """Per-worker faults that wipe out a replica's whole pool must
+        decommission it (re-routing its queue to survivors) — a
+        worker-less 'alive' replica would black-hole every query
+        placed on it."""
+        faults = {(0, 0): 0.1, (0, 1): 0.1}
+        ccfg = simulator.ClusterConfig(
+            n_replicas=2, workers_per_replica=2, placement="round_robin",
+            slo=0.036, fault_times=faults)
+        res = simulator.simulate_cluster(ARR, PROF, policies.SlackFit(), ccfg)
+        assert all(q.finish is not None or q.dropped for q in res.queries)
+        # replica 0 serves nothing after its pool is gone
+        assert all(q.replica == 1 for q in res.queries
+                   if q.finish is not None and q.finish > 0.1)
+        # and the router transport agrees (parity through the fix)
+        router = _virtual_cluster(2, 2, "round_robin")
+        recs = router.run_virtual(ARR, slo_s=0.036, fault_times=faults)
+        assert recs == res.records
+
+    def test_whole_cluster_death_drops_instead_of_crashing(self):
+        """Every replica dead: queued orphans and later arrivals are
+        recorded as drops — the simulation still runs to quiescence and
+        conserves every query."""
+        ccfg = simulator.ClusterConfig(
+            n_replicas=2, workers_per_replica=2, placement="round_robin",
+            slo=0.036, replica_deaths={0: 0.5, 1: 0.5})
+        res = simulator.simulate_cluster(ARR, PROF, policies.SlackFit(), ccfg)
+        assert len(res.queries) == len(ARR)
+        assert all(q.finish is not None or q.dropped for q in res.queries)
+        assert all(q.dropped for q in res.queries if q.arrival > 0.5)
+        assert any(q.finish is not None and not q.dropped
+                   for q in res.queries)          # pre-death work served
+
+    def test_death_of_last_replica_raises(self):
+        eng = SchedulingEngine(PROF, policies.SlackFit(),
+                               worker_ids=range(2))
+        coord = cluster.ClusterCoordinator([eng], cluster.RoundRobin())
+        coord.alive[0] = False
+        with pytest.raises(RuntimeError):
+            coord.select(Query(deadline=1.0, seq=0), now=0.0)
+
+
+class TestPlacementSemantics:
+    def _coord(self, depths, placement, workers=(2, 2, 2), deadline=1.0):
+        """Coordinator with manufactured queue depths per replica."""
+        engines = [SchedulingEngine(PROF, policies.SlackFit(),
+                                    worker_ids=range(w), replica_id=rid)
+                   for rid, w in enumerate(workers)]
+        for rid, depth in enumerate(depths):
+            for i in range(depth):
+                engines[rid].admit(Query(deadline=deadline, seq=0,
+                                         qid=1000 * rid + i))
+        return cluster.ClusterCoordinator(engines, placement)
+
+    def test_round_robin_cycles(self):
+        coord = self._coord([0, 0, 0], cluster.RoundRobin())
+        rids = [coord.route(Query(deadline=1.0, seq=0, qid=i), 0.0)
+                for i in range(6)]
+        assert rids == [0, 1, 2, 0, 1, 2]
+
+    def test_least_loaded_picks_smallest_backlog(self):
+        coord = self._coord([5, 0, 3], cluster.LeastLoaded())
+        assert coord.select(Query(deadline=1.0, seq=0), 0.0) == 1
+
+    def test_power_of_two_is_seeded_deterministic(self):
+        a = self._coord([4, 1, 9], cluster.PowerOfTwo())
+        b = self._coord([4, 1, 9], cluster.PowerOfTwo())
+        picks_a = [a.select(Query(deadline=1.0, seq=0), 0.0)
+                   for _ in range(10)]
+        picks_b = [b.select(Query(deadline=1.0, seq=0), 0.0)
+                   for _ in range(10)]
+        assert picks_a == picks_b
+        assert 0 in picks_a or 1 in picks_a      # never always the worst
+        assert not all(r == 2 for r in picks_a)
+
+    def test_slack_aware_routes_tight_to_earliest_start(self):
+        # queued work is MORE urgent than the probe, so it counts as
+        # "ahead" on every replica -> least of it wins
+        coord = self._coord([6, 0, 2], cluster.SlackAware(),
+                            deadline=PROF.lat.min())
+        tight = Query(deadline=PROF.lat.min() * 2, seq=0)  # slack < 10x min
+        assert coord.select(tight, 0.0) == 1
+        relaxed = Query(deadline=1e6, seq=0)
+        first = coord.select(relaxed, 0.0)
+        second = coord.select(relaxed, 0.0)
+        assert (first, second) == (0, 1)         # round-robin spread
+
+    def test_slack_aware_ignores_later_deadline_backlog(self):
+        """EDF serves a tight query before queued later-deadline work,
+        so that backlog must not repel it (ties -> lowest rid)."""
+        coord = self._coord([6, 0, 2], cluster.SlackAware(), deadline=900.0)
+        tight = Query(deadline=PROF.lat.min() * 2, seq=0)
+        assert coord.select(tight, 0.0) == 0
+
+    def test_projected_drain_reflects_capacity(self):
+        """Same backlog, more workers -> shorter projected drain (the
+        signal that lets slack-aware placement absorb heterogeneity)."""
+        small = SchedulingEngine(PROF, policies.SlackFit(),
+                                 worker_ids=range(1))
+        big = SchedulingEngine(PROF, policies.SlackFit(),
+                               worker_ids=range(4))
+        for eng in (small, big):
+            for i in range(8):
+                eng.admit(Query(deadline=1.0, seq=0, qid=i))
+        assert big.projected_drain(0.0) < small.projected_drain(0.0)
+
+    def test_unknown_placement_rejected(self):
+        with pytest.raises(ValueError):
+            cluster.make_placement("definitely_not_a_placement")
+
+    def test_heterogeneous_worker_counts_validated(self):
+        with pytest.raises(ValueError):
+            cluster.replica_worker_counts(3, [2, 2])
+        with pytest.raises(ValueError):
+            cluster.replica_worker_counts(2, [2, 0])
+        assert cluster.replica_worker_counts(3, 2) == [2, 2, 2]
+        assert cluster.replica_worker_counts(2, [4, 1]) == [4, 1]
+
+
+class TestClusterRouterAsync:
+    """The asyncio front door: one ClusterRouter over N real Routers."""
+
+    def test_spreads_and_serves_all(self):
+        async def main():
+            cr = ClusterRouter(PROF, policies.SlackFit(), _groups(3, 2),
+                               placement="round_robin")
+            await cr.start()
+            futs = [await cr.submit(np.ones(4), slo_s=2.0)
+                    for _ in range(12)]
+            results = await asyncio.gather(*futs)
+            await cr.drain()
+            return cr, results
+
+        cr, results = asyncio.run(main())
+        st = cr.stats()
+        assert st["served"] == 12
+        assert all(p is not None for p, _ in results)
+        assert set(st["replicas"]) == {0, 1, 2}   # every replica served
+        assert st["load_imbalance"] < 0.5
+
+    def test_kill_replica_reroutes_with_payloads(self):
+        async def main():
+            cr = ClusterRouter(PROF, policies.SlackFit(), _groups(3, 2),
+                               placement="round_robin")
+            await cr.start()
+            futs = []
+            for i in range(18):
+                futs.append(await cr.submit(np.ones(4), slo_s=5.0))
+                if i == 8:
+                    cr.kill_replica(1)
+                await asyncio.sleep(0.001)
+            results = await asyncio.gather(*futs)
+            await cr.drain()
+            return cr, results
+
+        cr, results = asyncio.run(main())
+        st = cr.stats()
+        assert st["served"] == 18                 # nothing lost
+        assert all(p is not None for p, _ in results)
+        # the dead replica finished nothing submitted after its death
+        assert all(q.replica != 1 for q in cr.coord.queries[10:])
+
+    def test_submit_racing_replica_death_is_rescued(self):
+        """A replica death landing between placement (coord.select) and
+        admission (submit_query suspended on the replica's lock) must
+        not black-hole the query: submit re-routes it to a survivor."""
+        async def main():
+            cr = ClusterRouter(PROF, policies.SlackFit(), _groups(2, 1),
+                               placement="round_robin")
+            await cr.start()
+            r0 = cr.routers[0]
+            async with r0._work:       # hold replica 0's admission lock
+                task = asyncio.create_task(cr.submit(np.ones(4), slo_s=2.0))
+                await asyncio.sleep(0.01)   # select() ran; admission blocked
+                cr.kill_replica(0)
+            fut = await task
+            result = await fut
+            await cr.drain(timeout=2.0)
+            return cr, result
+
+        cr, result = asyncio.run(main())
+        assert result[0] is not None              # served, not lost
+        assert cr.coord.queries[0].replica == 1   # by the survivor
+
+    def test_submit_after_total_death_resolves_as_dropped(self):
+        """Coordinator semantics under total cluster failure: the query
+        is recorded and its future resolves as dropped — never an
+        unhandled exception, never a lost query."""
+        async def main():
+            cr = ClusterRouter(PROF, policies.SlackFit(), _groups(2, 1),
+                               placement="round_robin")
+            await cr.start()
+            f0 = await cr.submit(np.ones(4), slo_s=2.0)
+            cr.kill_worker(0, 0)       # last worker -> decommission
+            cr.kill_replica(1)
+            f1 = await cr.submit(np.ones(4), slo_s=2.0)
+            r0, r1 = await asyncio.gather(f0, f1)
+            await cr.drain(timeout=1.0)
+            return cr, r0, r1
+
+        cr, r0, r1 = asyncio.run(main())
+        assert r1 == (None, 0.0)                  # dropped, resolved
+        assert len(cr.coord.queries) == 2         # both recorded
+        assert cr.coord.queries[1].dropped
+        assert cr.stats()["served"] == 2.0        # both resolved

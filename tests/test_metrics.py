@@ -1,0 +1,70 @@
+"""Metrics are total functions: empty and all-dropped query sets give
+well-defined finite values (regression for the NaN percentiles), and
+the cluster aggregation (per-replica stats, load imbalance) is exact on
+hand-built cases."""
+import math
+
+from repro.serving import metrics
+from repro.serving.queue import Query
+
+
+def _q(qid, replica=0, finish=0.02, dropped=False, deadline=0.036):
+    return Query(deadline=deadline, seq=0, arrival=0.0, qid=qid,
+                 replica=replica, finish=finish, dropped=dropped)
+
+
+class TestTotalOnDegenerateSets:
+    def test_latency_percentiles_empty(self):
+        assert metrics.latency_percentiles([]) == [0.0, 0.0]
+        assert metrics.latency_percentiles([], ps=(50, 90, 99)) == [0.0] * 3
+
+    def test_latency_percentiles_all_dropped(self):
+        qs = [_q(i, finish=None, dropped=True) for i in range(5)]
+        assert metrics.latency_percentiles(qs) == [0.0, 0.0]
+
+    def test_summarize_empty_is_finite(self):
+        s = metrics.summarize([])
+        assert all(isinstance(v, float) and math.isfinite(v)
+                   for v in s.values())
+        assert s["p50_latency_s"] == 0.0 and s["p99_latency_s"] == 0.0
+        assert s["served"] == 0.0 and s["join_rate"] == 0.0
+
+    def test_summarize_all_dropped_is_finite(self):
+        qs = [_q(i, finish=None, dropped=True) for i in range(4)]
+        s = metrics.summarize(qs)
+        assert all(math.isfinite(v) for v in s.values())
+        assert s["slo_attainment"] == 0.0 and s["mean_acc"] == 0.0
+        assert s["p99_latency_s"] == 0.0
+
+    def test_goodput_zero_duration(self):
+        assert metrics.goodput([], 0.0) == 0.0
+
+    def test_cluster_summarize_empty(self):
+        s = metrics.cluster_summarize([], n_replicas=4)
+        assert s["load_imbalance"] == 0.0
+        assert s["replicas"] == {}
+
+
+class TestClusterAggregation:
+    def test_per_replica_stats_partitions(self):
+        qs = [_q(0, replica=0), _q(1, replica=0), _q(2, replica=1)]
+        per = metrics.per_replica_stats(qs)
+        assert sorted(per) == [0, 1]
+        assert per[0]["served"] == 2.0 and per[1]["served"] == 1.0
+
+    def test_load_imbalance_balanced_is_zero(self):
+        qs = [_q(i, replica=i % 4) for i in range(16)]
+        assert metrics.load_imbalance(qs, n_replicas=4) == 0.0
+
+    def test_load_imbalance_skewed(self):
+        # 6 on replica 0, 2 on replica 1 -> mean 4, max 6 -> 0.5
+        qs = [_q(i, replica=0) for i in range(6)]
+        qs += [_q(10 + i, replica=1) for i in range(2)]
+        assert metrics.load_imbalance(qs, n_replicas=2) == 0.5
+
+    def test_load_imbalance_counts_empty_replicas(self):
+        qs = [_q(i, replica=0) for i in range(8)]
+        # all on one of 4 replicas: mean 2, max 8 -> 3.0
+        assert metrics.load_imbalance(qs, n_replicas=4) == 3.0
+        # without the forced denominator it's a single-replica set
+        assert metrics.load_imbalance(qs) == 0.0

@@ -20,6 +20,23 @@ def test_edf_pops_in_deadline_order(deadlines):
     assert popped == sorted(popped)
 
 
+@given(st.lists(st.sampled_from([0.1, 0.2, 0.3, 0.4]),
+                min_size=1, max_size=50))
+@settings(max_examples=60, deadline=None)
+def test_edf_equal_deadline_ties_pop_fifo(deadlines):
+    """Stable ordering: among equal deadlines, the FULL pop sequence
+    preserves insertion (FIFO) order — not just the head. Deadlines are
+    drawn from a tiny pool so collisions are the common case."""
+    q = EDFQueue()
+    for i, d in enumerate(deadlines):
+        q.push(Query(deadline=d, seq=0, arrival=0.0, qid=i))
+    popped = [q.pop() for _ in range(len(deadlines))]
+    assert [p.deadline for p in popped] == sorted(deadlines)
+    for d in set(deadlines):
+        qids = [p.qid for p in popped if p.deadline == d]
+        assert qids == sorted(qids)              # insertion order, stable
+
+
 @given(st.lists(st.floats(0.0, 10.0), min_size=1, max_size=40),
        st.floats(0.5, 5.0))
 @settings(max_examples=40, deadline=None)
