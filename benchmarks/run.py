@@ -18,7 +18,8 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_acceleration, bench_actuation, bench_bursty_grid,
+from benchmarks import (bench_acceleration, bench_actuation,
+                        bench_autoscaling, bench_bursty_grid,
                         bench_cluster_scaleout, bench_continuous_batching,
                         bench_ilp_oracle, bench_control_space,
                         bench_fault_tolerance, bench_maf, bench_memory,
@@ -35,6 +36,7 @@ ALL = {
     "bursty_grid": bench_bursty_grid.run,        # Fig 8
     "continuous_batching": bench_continuous_batching.run,  # §5 in-flight joins
     "cluster_scaleout": bench_cluster_scaleout.run,  # multi-replica plane
+    "autoscaling": bench_autoscaling.run,        # reactive replica scaling
     "acceleration": bench_acceleration.run,      # Fig 9
     "maf": bench_maf.run,                        # Fig 10
     "fault_tolerance": bench_fault_tolerance.run,  # Fig 11a

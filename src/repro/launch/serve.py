@@ -8,7 +8,10 @@ discrete-event engine (the real asyncio runtime is demonstrated by
 examples/serve_bursty.py on this host's actual devices). With
 ``--replicas N`` (N > 1) the same trace is served by the multi-replica
 cluster plane — N engines behind the coordinator, placement chosen by
-``--placement``.
+``--placement``. ``--autoscale`` adds the reactive replica autoscaler
+(spawn/decommission from load signals, ``--min-replicas`` /
+``--max-replicas`` bounds, ``--scale-policy`` signal) and reports
+replica-seconds, the scale-event log, and goodput per replica-second.
 """
 from __future__ import annotations
 
@@ -17,6 +20,7 @@ import json
 
 from repro.configs import get_config
 from repro.serving import cluster, policies, profiler, simulator, traces
+from repro.serving.autoscaler import SCALINGS, AutoscaleConfig
 
 
 def main():
@@ -50,6 +54,19 @@ def main():
     ap.add_argument("--continuous-batching", action="store_true",
                     help="keep forming batches open to in-flight joins "
                          "within the policy's latency budget (paper §5)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="reactive replica autoscaling: spawn/decommission "
+                         "replica groups from load signals (forces cluster "
+                         "mode; --replicas is the initial count)")
+    ap.add_argument("--min-replicas", type=int, default=1)
+    ap.add_argument("--max-replicas", type=int, default=8)
+    ap.add_argument("--scale-policy", default="queue_pressure",
+                    choices=sorted(k for k in SCALINGS if k != "scripted"),
+                    help="autoscaling signal (see serving/autoscaler.py)")
+    ap.add_argument("--cold-start", type=float, default=0.1,
+                    help="spawn -> routable actuation cost (s)")
+    ap.add_argument("--scale-cooldown", type=float, default=0.5,
+                    help="min gap before a scale-down (s)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -69,7 +86,7 @@ def main():
     else:
         arr = traces.maf_like_trace(args.rate, args.duration, seed=args.seed)
 
-    if args.replicas > 1:
+    if args.replicas > 1 or args.autoscale:
         faults = {}
         if args.faults:
             for part in args.faults.split(","):
@@ -81,17 +98,40 @@ def main():
             for part in args.replica_deaths.split(","):
                 rid, t = part.split(":")
                 deaths[int(rid)] = float(t)
+        autoscale = None
+        if args.autoscale:
+            if not (args.min_replicas <= args.replicas
+                    <= args.max_replicas):
+                ap.error(f"--replicas {args.replicas} must start within "
+                         f"[--min-replicas {args.min_replicas}, "
+                         f"--max-replicas {args.max_replicas}]")
+            autoscale = AutoscaleConfig(
+                min_replicas=args.min_replicas,
+                max_replicas=args.max_replicas, policy=args.scale_policy,
+                cold_start=args.cold_start, cooldown=args.scale_cooldown)
         ccfg = simulator.ClusterConfig(
             n_replicas=args.replicas, workers_per_replica=args.workers,
             placement=args.placement, placement_seed=args.seed,
             slo=args.slo_ms / 1e3, fault_times=faults, replica_deaths=deaths,
-            continuous_batching=args.continuous_batching)
+            continuous_batching=args.continuous_batching,
+            autoscale=autoscale)
         res = simulator.simulate_cluster(arr, prof, pol, ccfg)
         st = res.stats()
         extra = {"replicas": args.replicas, "placement": args.placement,
                  "load_imbalance": st["load_imbalance"],
                  "per_replica_served": {r: v["served"]
                                         for r, v in st["replicas"].items()}}
+        if args.autoscale:
+            extra.update({
+                "autoscale_policy": args.scale_policy,
+                "replicas_total": res.n_replicas,   # ever existed
+                "replica_seconds": res.replica_seconds,
+                "goodput_per_replica_second":
+                    st.get("goodput_per_replica_second", 0.0),
+                "scale_events": [
+                    {"t": round(e.t, 4), "kind": e.kind, "rid": e.rid,
+                     "committed": e.n_committed, "signal": round(e.signal, 3)}
+                    for e in res.scale_events]})
     else:
         faults = {}
         if args.faults:

@@ -10,4 +10,11 @@ Scale-out (serving/cluster.py): N replica groups — one engine each —
 behind a ClusterCoordinator with pluggable replica placement
 (round-robin / least-loaded / power-of-two / slack-aware) and
 replica-death re-routing; both transports grow cluster counterparts
-(simulate_cluster, ClusterRouter) over one shared event loop."""
+(simulate_cluster, ClusterRouter) over one shared event loop.
+
+Autoscaling (serving/autoscaler.py): a ClusterAutoscaler rides on the
+coordinator's replica-lifecycle surface and spawns / gracefully
+decommissions replica groups from pluggable load signals
+(queue_pressure / slo_headroom), with cold-start actuation,
+replica-seconds accounting, and a scale-event log — same control loop
+on both transports, so autoscaled schedules stay deterministic."""

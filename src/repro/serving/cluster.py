@@ -16,16 +16,20 @@ set of engines behind a coordinator":
     coordinator, which re-routes the orphans to survivors.
 
 Division of labor, extending PR 2's rule: *scheduling* logic lives in
-the engine only; *placement* logic lives in the coordinator only.
-Transports stay thin: ``drive_cluster`` below is the one discrete-event
-loop shared by the ``ClusterSimulator`` (serving/simulator.py) and the
-``ClusterRouter``'s parity mode (serving/runtime.py) — a single event
-heap across all replicas, so multi-replica schedules are exactly as
-deterministic as single-replica ones.
+the engine only; *placement and scaling* logic live in the coordinator
+layer only (placement here, the reactive replica lifecycle in
+serving/autoscaler.py riding on this coordinator's ``add_replica`` /
+``mark_ready`` / ``redistribute`` surface). Transports stay thin:
+``drive_cluster`` below is the one discrete-event loop shared by the
+``ClusterSimulator`` (serving/simulator.py) and the ``ClusterRouter``'s
+parity mode (serving/runtime.py) — a single event heap across all
+replicas (scale ticks included), so multi-replica schedules are exactly
+as deterministic as single-replica ones.
 """
 from __future__ import annotations
 
 import heapq
+from collections import deque
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -41,6 +45,12 @@ from repro.serving.queue import Query
 
 # replica-death events carry this sentinel instead of a worker id
 ALL_WORKERS = -1
+
+# cluster-only event kinds, continuing engine.py's EV_* numbering so
+# simultaneous events keep a deterministic total order: a replica
+# becoming ready (cold start paid) processes before the scale tick
+# that might read it, and both after all serving events at that time
+EV_READY, EV_SCALE = 4, 5
 
 
 # --------------------------------------------------------------------------
@@ -87,9 +97,7 @@ class LeastLoaded(PlacementPolicy):
     name = "least_loaded"
 
     def choose(self, replicas, q, now):
-        return min(replicas,
-                   key=lambda re: (re[1].queue_depth()
-                                   + re[1].inflight_depth(), re[0]))[0]
+        return min(replicas, key=lambda re: (re[1].outstanding(), re[0]))[0]
 
 
 class PowerOfTwo(PlacementPolicy):
@@ -107,33 +115,71 @@ class PowerOfTwo(PlacementPolicy):
             return replicas[0][0]
         i, j = self._rng.choice(len(replicas), size=2, replace=False)
         a, b = replicas[int(i)], replicas[int(j)]
-        ka = (a[1].queue_depth() + a[1].inflight_depth(), a[0])
-        kb = (b[1].queue_depth() + b[1].inflight_depth(), b[0])
+        ka = (a[1].outstanding(), a[0])
+        kb = (b[1].outstanding(), b[0])
         return a[0] if ka <= kb else b[0]
 
 
 class SlackAware(PlacementPolicy):
-    """Deadline-aware routing: a *tight* query (slack under
-    ``tight_mult`` fastest-service times — which covers the paper's
-    36 ms SLO regime at the default) goes to the replica that can
-    *start it* soonest (``projected_start``: in-flight work plus only
-    the EDF queue ahead of its deadline, weighted by pool capacity —
-    queued later-deadline work doesn't repel a tight query, since EDF
+    """Deadline-aware routing: a *tight* query goes to the replica that
+    can *start it* soonest (``projected_start``: in-flight work plus
+    only the EDF queue ahead of its deadline, weighted by pool capacity
+    — queued later-deadline work doesn't repel a tight query, since EDF
     serves it first anyway); with generous slack the queue joined
-    barely matters, so relaxed queries round-robin to keep load
-    spread."""
+    barely matters, so relaxed queries round-robin to keep load spread.
+
+    What counts as *tight* is learned from the observed slack
+    distribution (ROADMAP open item): the threshold is the midpoint of
+    the rolling 25th/75th-percentile slacks over the last ``window``
+    placements, so a bimodal trace splits between its own modes instead
+    of on a fixed multiple of the fastest service time (which misroutes
+    whenever both modes sit on the same side of it). A query at the
+    threshold counts as tight (``<=``), so a degenerate uniform-slack
+    trace — e.g. every query at the paper's 36 ms SLO — routes every
+    query by earliest start; skewed mixes likewise err toward *tight*,
+    which costs a start-estimate scan, never a misroute. Until
+    ``min_history`` slacks are seen the fixed ``tight_mult`` x
+    fastest-service fallback applies (and is the whole rule when
+    ``adaptive=False``)."""
 
     name = "slack_aware"
 
-    def __init__(self, tight_mult: float = 10.0):
+    def __init__(self, tight_mult: float = 10.0, adaptive: bool = True,
+                 window: int = 256, min_history: int = 32):
         self.tight_mult = tight_mult
+        self.adaptive = adaptive
+        self.window = int(window)
+        self.min_history = int(min_history)
 
     def reset(self, n_replicas: int, seed: int = 0) -> None:
         self._i = 0
+        self._slacks: deque = deque(maxlen=self.window)
+        self._thr: Optional[float] = None   # cached learned threshold
+        self._n_seen = 0
+
+    def _threshold(self, min_service: float) -> float:
+        if self.adaptive and self._thr is not None:
+            return self._thr
+        return self.tight_mult * min_service
+
+    def _observe(self, slack: float) -> None:
+        """Record a placement-time slack; refresh the learned threshold
+        every ``min_history`` observations — the distribution moves
+        slowly by construction, and a per-query percentile sort would
+        put O(window log window) on the placement hot path."""
+        self._slacks.append(slack)
+        self._n_seen += 1
+        if (self._n_seen >= self.min_history
+                and self._n_seen % self.min_history == 0):
+            lo, hi = np.percentile(self._slacks, (25, 75))
+            self._thr = float(lo + hi) / 2.0
 
     def choose(self, replicas, q, now):
         slack = q.deadline - now
-        if slack < self.tight_mult * replicas[0][1].min_service:
+        thr = self._threshold(replicas[0][1].min_service)
+        if self.adaptive:
+            self._observe(slack)
+        if slack <= thr:
             return min(replicas,
                        key=lambda re: (re[1].projected_start(q.deadline, now),
                                        re[0]))[0]
@@ -177,6 +223,9 @@ class ClusterCoordinator:
             raise ValueError("a cluster needs at least one replica")
         self.engines = list(engines)
         self.alive: List[bool] = [True] * len(self.engines)
+        # routable = alive AND ready; a replica spawned by the
+        # autoscaler is alive-but-warming (cold start) until mark_ready
+        self.ready: List[bool] = [True] * len(self.engines)
         self.placement = placement
         placement.reset(len(self.engines), seed=placement_seed)
         self.queries: List[Query] = []      # master admission list
@@ -188,8 +237,24 @@ class ClusterCoordinator:
         return len(self.engines)
 
     def alive_replicas(self) -> List[Tuple[int, SchedulingEngine]]:
+        """Routable replicas: alive and past their cold start."""
         return [(rid, e) for rid, e in enumerate(self.engines)
-                if self.alive[rid]]
+                if self.alive[rid] and self.ready[rid]]
+
+    # -- replica lifecycle (the autoscaler's surface) -------------------
+
+    def add_replica(self, engine: SchedulingEngine,
+                    ready: bool = True) -> int:
+        """Register a new replica group. ``ready=False`` keeps it
+        unroutable until ``mark_ready`` (the cold-start window)."""
+        rid = len(self.engines)
+        self.engines.append(engine)
+        self.alive.append(True)
+        self.ready.append(bool(ready))
+        return rid
+
+    def mark_ready(self, rid: int) -> None:
+        self.ready[rid] = True
 
     # -- admission -----------------------------------------------------
 
@@ -211,10 +276,11 @@ class ClusterCoordinator:
 
     def admit(self, q: Query, now: float) -> Optional[int]:
         """Cluster front door: record the query once and route it.
-        With every replica dead there is nowhere to route — the query
-        is dropped (recorded, never served) and None returned."""
+        With no routable replica (every one dead, or the survivors all
+        still warming) there is nowhere to route — the query is dropped
+        (recorded, never served) and None returned."""
         self.queries.append(q)
-        if not any(self.alive):
+        if not self.alive_replicas():
             q.dropped = True
             return None
         return self.route(q, now)
@@ -239,13 +305,16 @@ class ClusterCoordinator:
         return self.redistribute(rid, now)
 
     def redistribute(self, rid: int, now: float) -> List[Tuple[Query, int]]:
-        """Drain-and-re-route the (already worker-faulted) replica's
-        queue; used directly by the asyncio ClusterRouter, whose
-        ``kill_worker`` handles the per-worker fault bookkeeping. When
-        the whole cluster is dead the orphans are dropped instead."""
+        """Drain-and-re-route the replica's queue back through
+        placement: THE surrender/drain path, shared by replica death
+        (workers already faulted, so the re-enqueued in-flight queries
+        are surrendered too) and by the autoscaler's graceful
+        decommission (workers untouched — their in-flight batches
+        finish on the old replica). With no routable replica left the
+        orphans are dropped instead of black-holed."""
         self.alive[rid] = False
         orphans = self.engines[rid].surrender_queue()
-        if not any(self.alive):
+        if not self.alive_replicas():
             for q in orphans:
                 q.dropped = True
             return []
@@ -278,7 +347,7 @@ def drive_cluster(coord: ClusterCoordinator, queries: Sequence[Query],
                   replica_deaths: Optional[Dict[int, float]] = None,
                   fault_times: Optional[Dict[Tuple[int, int], float]] = None,
                   clock: Optional[VirtualClock] = None,
-                  service_fn=None) -> None:
+                  service_fn=None, autoscaler=None) -> None:
     """Run the whole cluster to quiescence under one virtual clock.
 
     The multi-replica analogue of ``engine.drive``: ONE event heap
@@ -289,12 +358,25 @@ def drive_cluster(coord: ClusterCoordinator, queries: Sequence[Query],
     the engine's expected service time (simulator stragglers).
     Replica deaths enter as FAULT events with the ``ALL_WORKERS``
     sentinel; per-worker faults as ``(rid, wid)``.
+
+    With a ``ClusterAutoscaler`` (serving/autoscaler.py), periodic
+    SCALE ticks run its control loop on this same heap: a spawn
+    schedules a READY event after the cold start (only then do the new
+    workers join the idle pool), a decommission re-routes the victim's
+    queue through placement and wakes the survivors — while the
+    victim's in-flight batches still complete (graceful drain). Ticks
+    stop once arrivals are exhausted and all work has drained, so the
+    loop still quiesces.
     """
     events: List = [(q.arrival, EV_ARRIVAL, 0, q.qid) for q in queries]
     for rid, t in (replica_deaths or {}).items():
         events.append((float(t), EV_FAULT, int(rid), ALL_WORKERS))
     for (rid, wid), t in (fault_times or {}).items():
         events.append((float(t), EV_FAULT, int(rid), int(wid)))
+    t_last_arrival = max((q.arrival for q in queries), default=0.0)
+    if autoscaler is not None:
+        autoscaler.anchor(0.0)          # virtual time starts at 0
+        events.append((autoscaler.cfg.interval, EV_SCALE, -1, 0))
     heapq.heapify(events)
     idle: Dict[int, List[int]] = {rid: list(wids)
                                   for rid, wids in worker_ids.items()}
@@ -336,7 +418,11 @@ def drive_cluster(coord: ClusterCoordinator, queries: Sequence[Query],
             if target is not None:      # None: whole cluster dead, dropped
                 dispatch_all(target, now)
         elif kind == EV_FREE:
-            if (rid, ident) in dead_workers or not coord.alive[rid]:
+            # dead workers (their replica died) discard the batch; a
+            # merely-decommissioned replica's workers are NOT dead —
+            # their in-flight batches complete (graceful scale-down
+            # drain), so only the per-worker death set gates here
+            if (rid, ident) in dead_workers:
                 continue
             eng = coord.engines[rid]
             d = eng.inflight.get(ident)
@@ -352,29 +438,60 @@ def drive_cluster(coord: ClusterCoordinator, queries: Sequence[Query],
                     and d.launch_at == now):
                 start(rid, d, now)
         elif kind == EV_FAULT:
+            if rid >= len(coord.engines):   # fault injected for a rid
+                continue                    # the autoscaler never spawned
             if ident == ALL_WORKERS:        # whole replica dies
-                for wid in list(idle[rid]) + [
+                for wid in list(idle.get(rid, [])) + [
                         w for w in coord.engines[rid].worker_model]:
                     dead_workers.add((rid, wid))
-                idle[rid].clear()
+                idle.get(rid, []).clear()
+                was_alive = coord.alive[rid]
                 coord.fail_replica(rid, now)
+                if autoscaler is not None and was_alive:
+                    autoscaler.on_death(rid, now)
                 # orphans were re-routed through placement: wake every
                 # surviving replica, in rid order, deterministically
                 for other, _ in coord.alive_replicas():
                     dispatch_all(other, now)
             else:
                 dead_workers.add((rid, ident))
-                if ident in idle[rid]:
+                if ident in idle.get(rid, []):
                     idle[rid].remove(ident)
                 coord.engines[rid].fault(ident)
                 if coord.should_decommission(rid):
                     # last worker gone: re-route the queue (incl. the
                     # just-re-enqueued batch) to survivors
                     coord.redistribute(rid, now)
+                    if autoscaler is not None:
+                        autoscaler.on_death(rid, now)
                     for other, _ in coord.alive_replicas():
                         dispatch_all(other, now)
                 elif coord.alive[rid]:
                     dispatch_all(rid, now)
+                elif len(coord.engines[rid].edf):
+                    # the fault re-enqueued an in-flight batch onto an
+                    # already-decommissioned replica (scale-down racing
+                    # a worker death): surrender it again — the queue
+                    # must never silently strand
+                    coord.redistribute(rid, now)
+                    for other, _ in coord.alive_replicas():
+                        dispatch_all(other, now)
+        elif kind == EV_READY:              # cold start paid: join the pool
+            if not coord.alive[rid]:
+                continue                    # died while still warming
+            idle[rid] = autoscaler.activate(rid, now)
+            dispatch_all(rid, now)
+        elif kind == EV_SCALE:
+            for ev in autoscaler.tick(now):
+                if ev.kind == "spawn":
+                    idle[ev.rid] = []       # workers join at READY
+                    push(ev.ready_at, EV_READY, ev.rid, 0)
+                else:                       # decommission: queue re-routed —
+                    for other, _ in coord.alive_replicas():
+                        dispatch_all(other, now)   # wake the survivors
+            if now <= t_last_arrival or any(
+                    len(e.edf) or e.inflight for e in coord.engines):
+                push(now + autoscaler.cfg.interval, EV_SCALE, -1, 0)
 
 
 # --------------------------------------------------------------------------

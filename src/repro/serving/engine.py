@@ -371,6 +371,11 @@ class SchedulingEngine:
         """Queries currently bound to workers (forming or executing)."""
         return sum(len(d.queries) for d in self.inflight.values())
 
+    def outstanding(self) -> int:
+        """Total unfinished load: queued + in-flight queries (the
+        load-aware placement and autoscaler victim-selection signal)."""
+        return len(self.edf) + self.inflight_depth()
+
     def work_ahead(self, deadline: float) -> int:
         """Queued queries that EDF would serve before an arrival with
         ``deadline``."""

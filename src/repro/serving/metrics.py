@@ -8,7 +8,7 @@ well-defined finite values (0.0 for latency percentiles and
 imbalance), never NaN or a ZeroDivisionError."""
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -69,35 +69,74 @@ def summarize(queries: Sequence[Query], n_joins: int = 0) -> Dict[str, float]:
 # --------------------------------------------------------------------------
 
 
-def per_replica_stats(queries: Sequence[Query]) -> Dict[int, Dict[str, float]]:
+def per_replica_stats(queries: Sequence[Query],
+                      replica_ids: Optional[Iterable[int]] = None
+                      ) -> Dict[int, Dict[str, float]]:
     """``summarize`` per replica group (keyed by the replica that last
-    admitted each query — re-routed queries count where they landed)."""
-    by_rid: Dict[int, List[Query]] = {}
+    admitted each query — re-routed queries count where they landed).
+    ``replica_ids`` names every replica that existed (autoscaled runs:
+    the span keys), so replicas that served nothing still report a
+    well-defined all-zero row instead of silently vanishing."""
+    by_rid: Dict[int, List[Query]] = {int(r): []
+                                      for r in (replica_ids or ())}
     for q in queries:
         by_rid.setdefault(q.replica, []).append(q)
     return {rid: summarize(qs) for rid, qs in sorted(by_rid.items())}
 
 
-def load_imbalance(queries: Sequence[Query],
-                   n_replicas: int = 0) -> float:
-    """Placement-quality metric: max/mean − 1 of per-replica query
-    counts (0.0 = perfectly balanced; 0.0 on empty sets). ``n_replicas``
-    forces the denominator so replicas that received nothing count."""
+def load_imbalance(queries: Sequence[Query], n_replicas: int = 0,
+                   replica_spans: Optional[Dict[int, float]] = None) -> float:
+    """Placement-quality metric: max/mean − 1 of per-replica serving
+    load (0.0 = perfectly balanced).
+
+    Static clusters compare raw per-replica query *counts*;
+    ``n_replicas`` forces the denominator so full-run replicas that
+    received nothing count. With ``replica_spans`` (rid -> active
+    seconds, the autoscaled path) the comparison is per-replica query
+    *rates* (queries per active second): a replica that existed for a
+    tenth of the run is judged on its rate over that tenth, not
+    punished as a 0-query phantom — and zero-lifetime replicas are
+    excluded entirely. Degenerate cases are defined exactly: no
+    queries -> 0.0, and a single (counted) replica -> 0.0, since a
+    lone replica cannot be imbalanced against itself."""
     if not queries:
         return 0.0
     counts: Dict[int, int] = {}
     for q in queries:
         counts[q.replica] = counts.get(q.replica, 0) + 1
+    if replica_spans is not None:
+        rates = [counts.get(rid, 0) / span
+                 for rid, span in replica_spans.items() if span > 1e-12]
+        if len(rates) <= 1:
+            return 0.0
+        mean = sum(rates) / len(rates)
+        return max(rates) / mean - 1.0 if mean > 0 else 0.0
     n = max(n_replicas, len(counts), 1)
+    if n <= 1:
+        return 0.0
     mean = len(queries) / n
     return max(counts.values()) / mean - 1.0 if mean > 0 else 0.0
 
 
 def cluster_summarize(queries: Sequence[Query], n_replicas: int = 0,
-                      n_joins: int = 0) -> Dict[str, float]:
+                      n_joins: int = 0,
+                      replica_spans: Optional[Dict[int, float]] = None
+                      ) -> Dict[str, float]:
     """Aggregate serving report plus the load-imbalance metric; the
-    per-replica breakdown rides under the ``replicas`` key."""
+    per-replica breakdown rides under the ``replicas`` key. With
+    ``replica_spans`` (autoscaled runs) the report adds the provisioned
+    ``replica_seconds`` and the goodput-per-replica-second efficiency
+    figure (SLO-satisfying completions per unit of capacity-time)."""
     out = summarize(queries, n_joins=n_joins)
-    out["load_imbalance"] = load_imbalance(queries, n_replicas)
-    out["replicas"] = per_replica_stats(queries)
+    out["load_imbalance"] = load_imbalance(queries, n_replicas,
+                                           replica_spans=replica_spans)
+    out["replicas"] = per_replica_stats(
+        queries, replica_ids=replica_spans.keys() if replica_spans else None)
+    if replica_spans:
+        total = sum(replica_spans.values())
+        ok = sum(1 for q in queries
+                 if q.finish is not None and q.finish <= q.deadline
+                 and not q.dropped)
+        out["replica_seconds"] = total
+        out["goodput_per_replica_second"] = ok / total if total > 0 else 0.0
     return out

@@ -22,16 +22,19 @@ from __future__ import annotations
 
 import asyncio
 import time
+import traceback
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.serving.autoscaler import AutoscaleConfig, ClusterAutoscaler
 from repro.serving.cluster import (ClusterCoordinator, drive_cluster,
                                    make_placement)
 from repro.serving.engine import (CompletionRecord, Dispatch, EngineConfig,
                                   SchedulingEngine, VirtualClock, WallClock,
                                   drive)
+from repro.serving.metrics import cluster_summarize
 from repro.serving.policies import Policy
 from repro.serving.profiler import LatencyProfile
 from repro.serving.queue import Query
@@ -313,14 +316,32 @@ class ClusterRouter:
     path — then drains the dead replica's queue back through the
     coordinator, which re-routes the orphans (payloads and futures
     travel with them) to surviving replicas.
+
+    With an ``AutoscaleConfig`` the cluster additionally runs a
+    ``ClusterAutoscaler`` (serving/autoscaler.py): a live asyncio
+    control loop spawns whole Router replicas (cold start before they
+    turn routable) and gracefully decommissions them — queued work
+    re-routes with its payloads/futures, in-flight batches finish on
+    the old workers. ``run_virtual`` drives the same autoscaler on the
+    shared virtual heap for parity with ``simulate_cluster``.
     """
 
     def __init__(self, profile: LatencyProfile, policy: Policy,
                  replicas: Sequence[Sequence[WorkerHandle]],
                  clock=None, engine_cfg: Optional[EngineConfig] = None,
-                 placement: str = "round_robin", placement_seed: int = 0):
+                 placement: str = "round_robin", placement_seed: int = 0,
+                 autoscale: Optional[AutoscaleConfig] = None,
+                 worker_factory: Optional[Callable[[int],
+                                          List[WorkerHandle]]] = None,
+                 slo: float = 0.036):
+        # ``slo`` is the deadline regime the autoscaler's thresholds
+        # normalize to (when AutoscaleConfig.slo is None) — match the
+        # slo_s you submit/run_virtual with, as simulate_cluster's
+        # autoscaler inherits ClusterConfig.slo the same way
         self.profile = profile
         self.clock = clock if clock is not None else WallClock()
+        self._policy_proto = policy
+        self._engine_cfg = engine_cfg
         self.routers = [
             Router(profile, policy.clone(), group, clock=self.clock,
                    engine_cfg=engine_cfg, replica_id=rid)
@@ -329,19 +350,92 @@ class ClusterRouter:
             [r.engine for r in self.routers], make_placement(placement),
             placement_seed=placement_seed)
         self._qid = 0
+        self._started = False
+        self._scale_task: Optional[asyncio.Task] = None
+        # autoscaling: spawned replica groups come from worker_factory
+        # (default: spawn_workers clones of the first group's run fn,
+        # wids 0..k-1 to mirror the simulator's spawned pools)
+        self._worker_factory = worker_factory
+        if worker_factory is None and replicas and replicas[0]:
+            run0 = replicas[0][0].run
+            k = (autoscale.spawn_workers if autoscale
+                 and autoscale.spawn_workers else len(replicas[0]))
+            self._worker_factory = lambda rid: [
+                WorkerHandle(wid=i, run=run0) for i in range(k)]
+        self.autoscaler = None
+        if autoscale is not None:
+            if self._worker_factory is None:
+                raise ValueError(
+                    "autoscaling needs a worker_factory (none given and "
+                    "no first replica group to clone one from)")
+            if len(self.routers) > autoscale.max_replicas:
+                raise ValueError(
+                    f"{len(self.routers)} initial replicas exceed "
+                    f"max_replicas={autoscale.max_replicas}")
+            if (autoscale.spawn_workers is None and worker_factory is None
+                    and len({len(g) for g in replicas}) > 1):
+                raise ValueError(
+                    "heterogeneous worker pools need an explicit "
+                    "AutoscaleConfig.spawn_workers or a worker_factory")
+            self.autoscaler = ClusterAutoscaler(
+                self.coord, autoscale, self._spawn_replica_engine,
+                slo=slo, migrate_fn=self._migrate)
+
+    def _spawn_replica_engine(self, rid: int):
+        """Autoscaler hook: a spawned replica group is a full Router
+        (its engine registers with the coordinator). In the live plane
+        the autoscale loop starts it; in the virtual parity path
+        drive_cluster drives the engine directly."""
+        r = Router(self.profile, self._policy_proto.clone(),
+                   self._worker_factory(rid), clock=self.clock,
+                   engine_cfg=self._engine_cfg, replica_id=rid)
+        assert len(self.routers) == rid
+        self.routers.append(r)
+        return r.engine
 
     # -- async serving path ---------------------------------------------
 
     async def start(self):
         for r in self.routers:
             await r.start()
+        self._started = True
+        if self.autoscaler is not None:
+            self.autoscaler.anchor(self.clock.now())
+            self._scale_task = asyncio.create_task(self._autoscale_loop())
+
+    async def _autoscale_loop(self):
+        """Live control loop (wall clock): the asyncio twin of the
+        SCALE/READY events drive_cluster puts on the virtual heap. A
+        failing tick must not silently end autoscaling for the rest of
+        the run, so errors are reported and the loop keeps going."""
+        cfg = self.autoscaler.cfg
+        loop = asyncio.get_running_loop()
+        while True:
+            await asyncio.sleep(cfg.interval)
+            try:
+                for ev in self.autoscaler.tick(self.clock.now()):
+                    if ev.kind == "spawn":
+                        await self.routers[ev.rid].start()
+                        loop.call_later(
+                            max(ev.ready_at - self.clock.now(), 0.0),
+                            self._activate, ev.rid)
+                    # decommission: tick already re-routed the queue
+                    # and migrated payloads/futures via _migrate
+            except Exception:           # noqa: BLE001 — keep scaling alive
+                traceback.print_exc()
+
+    def _activate(self, rid: int):
+        """Cold start paid: the spawned replica becomes routable (a
+        replica killed mid-warm-up stays down)."""
+        if self.coord.alive[rid]:
+            self.autoscaler.activate(rid, self.clock.now())
 
     async def submit(self, payload: Any, slo_s: float) -> asyncio.Future:
         now = self.clock.now()
         q = Query(deadline=now + slo_s, seq=0, arrival=now, qid=self._qid)
         self._qid += 1
         self.coord.queries.append(q)
-        if not any(self.coord.alive):
+        if not self.coord.alive_replicas():
             # coordinator semantics (cluster.py admit): nowhere to
             # route — record the query and resolve it as dropped
             q.dropped = True
@@ -361,16 +455,34 @@ class ClusterRouter:
         self.routers[rid].kill_worker(wid)
         if self.coord.should_decommission(rid):
             self._rescue(rid)
+            self._book_death(rid)
+        elif (not self.coord.alive[rid]
+                and len(self.routers[rid].engine.edf)):
+            # fault re-enqueued onto an already-decommissioned replica:
+            # surrender the queue again (payloads travel with it)
+            self._rescue(rid)
 
     def kill_replica(self, rid: int):
         """Whole replica group dies: fault every worker, then re-route
         its queued + re-enqueued queries (with their payloads/futures)
         to survivors through the placement policy."""
+        was_alive = self.coord.alive[rid]
         r = self.routers[rid]
         for w in list(r.workers):
             r.kill_worker(w.wid)        # may already _rescue on the last
         if self.coord.alive[rid]:
             self._rescue(rid)
+        if was_alive:
+            self._book_death(rid)
+
+    def _book_death(self, rid: int):
+        """Mirror drive_cluster's EV_FAULT bookkeeping on the live
+        path: the autoscaler must close the dead replica's billing
+        span (and forget it if it was still warming), or
+        replica_seconds overstates and a dead warming replica would
+        inflate n_committed forever."""
+        if self.autoscaler is not None:
+            self.autoscaler.on_death(rid, self.clock.now())
 
     def _rescue(self, rid: int):
         """Drain replica ``rid``'s queue back through the coordinator
@@ -378,8 +490,17 @@ class ClusterRouter:
         re-routed replicas. Safe to call again on an already-dead
         replica — the late-admission race in ``submit`` needs exactly
         that to re-route a query that landed after the death."""
+        self._migrate(rid, self.coord.redistribute(rid, self.clock.now()))
+
+    def _migrate(self, rid: int, moved):
+        """Move the payloads/futures of re-routed queries to their new
+        replicas and wake those schedulers. Shared by the death path
+        (``_rescue``) and the autoscaler's graceful decommission (its
+        ``migrate_fn`` hook). A no-op before ``start`` — the virtual
+        parity path drives bare engines and owns dispatch itself."""
+        if not self._started:
+            return
         r = self.routers[rid]
-        moved = self.coord.redistribute(rid, self.clock.now())
         woken = set()
         for q, target in moved:
             sq = r._payloads.pop(q.qid, None)
@@ -408,9 +529,18 @@ class ClusterRouter:
             pass                        # no loop: nothing to wake
 
     async def drain(self, timeout: float = 10.0):
+        if self._scale_task is not None:
+            self._scale_task.cancel()
+            self._scale_task = None
         await asyncio.gather(*(r.drain(timeout) for r in self.routers))
 
     def stats(self) -> Dict[str, float]:
+        if self.autoscaler is not None:
+            return cluster_summarize(
+                self.coord.queries, n_replicas=self.coord.n_replicas,
+                n_joins=sum(e.n_joins for e in self.coord.engines),
+                replica_spans=self.autoscaler.replica_spans(
+                    self.clock.now()))
         return self.coord.stats()
 
     def records(self) -> List[CompletionRecord]:
@@ -425,7 +555,9 @@ class ClusterRouter:
         """Drive the whole cluster to quiescence on its VirtualClock
         through the shared event loop in serving/cluster.py — the
         parity path proving ClusterRouter and ClusterSimulator place
-        and schedule identically."""
+        and schedule identically, autoscaling included (scale ticks
+        ride the same virtual heap; spawned Routers contribute their
+        engines without ever starting an asyncio loop)."""
         if not isinstance(self.clock, VirtualClock):
             raise TypeError("run_virtual requires a VirtualClock cluster")
         queries = [Query(deadline=float(t) + slo_s, seq=i,
@@ -436,7 +568,14 @@ class ClusterRouter:
             {rid: [w.wid for w in r.workers if w.alive]
              for rid, r in enumerate(self.routers)},
             replica_deaths=replica_deaths, fault_times=fault_times,
-            clock=self.clock)
+            clock=self.clock, autoscaler=self.autoscaler)
+        if self.autoscaler is not None:
+            # close open spans at the same nominal horizon the
+            # simulator bills to (last arrival + drain margin), so both
+            # transports report identical replica_seconds for
+            # identical schedules
+            t_end = (max(arrivals) if len(arrivals) else 0.0) + 4 * slo_s
+            self.autoscaler.finalize(float(t_end))
         return self.coord.records()
 
 

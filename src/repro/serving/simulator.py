@@ -19,10 +19,12 @@ deterministic as one engine.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.serving.autoscaler import (AutoscaleConfig, ClusterAutoscaler,
+                                      ScaleEvent)
 from repro.serving.cluster import (ClusterCoordinator, build_engines,
                                    drive_cluster, make_placement,
                                    replica_worker_counts)
@@ -172,6 +174,10 @@ class ClusterConfig:
     # fault injection: whole replicas and/or single workers
     replica_deaths: Dict[int, float] = field(default_factory=dict)
     fault_times: Dict[Tuple[int, int], float] = field(default_factory=dict)
+    # reactive replica autoscaling (serving/autoscaler.py); None keeps
+    # the replica count static (byte-identical to the pre-autoscaler
+    # cluster plane — guarded in tests/test_autoscaler.py)
+    autoscale: Optional[AutoscaleConfig] = None
 
     def engine_config(self) -> EngineConfig:
         return EngineConfig(actuation_delay=self.actuation_delay,
@@ -186,8 +192,18 @@ class ClusterResult:
     queries: List[Query]                    # master list, cluster order
     dispatches: List[DispatchRecord]        # all replicas, time order
     duration: float
-    n_replicas: int
+    n_replicas: int                         # replicas that ever existed
     n_joins: int = 0
+    # autoscaling accounting: per-replica active seconds (static runs
+    # bill every replica for the whole duration) + the scale-event log
+    replica_spans: Dict[int, float] = field(default_factory=dict)
+    scale_events: List[ScaleEvent] = field(default_factory=list)
+
+    @property
+    def replica_seconds(self) -> float:
+        """Total provisioned capacity-time — the denominator of the
+        goodput-per-replica-second efficiency figure."""
+        return sum(self.replica_spans.values())
 
     @property
     def slo_attainment(self) -> float:
@@ -211,7 +227,8 @@ class ClusterResult:
 
     def stats(self) -> Dict[str, float]:
         return cluster_summarize(self.queries, n_replicas=self.n_replicas,
-                                 n_joins=self.n_joins)
+                                 n_joins=self.n_joins,
+                                 replica_spans=self.replica_spans)
 
 
 def simulate_cluster(arrivals: Sequence[float], profile: LatencyProfile,
@@ -219,25 +236,67 @@ def simulate_cluster(arrivals: Sequence[float], profile: LatencyProfile,
     """Virtual-clock cluster simulation: one coordinator, N per-replica
     engines (the prototype ``policy`` is cloned per replica), a single
     shared event heap. A 1-replica cluster replays ``simulate``'s
-    schedule record-for-record (guarded by tests/test_cluster.py)."""
+    schedule record-for-record (guarded by tests/test_cluster.py).
+
+    With ``ccfg.autoscale``, a ``ClusterAutoscaler`` runs its control
+    loop on the same heap: spawned replicas get ``spawn_workers``
+    workers (default: the static per-replica count) after paying the
+    cold start; decommissions re-route the victim's queue through
+    placement while its in-flight batches drain."""
     queries = [Query(deadline=float(t) + ccfg.slo, seq=i,
                      arrival=float(t), qid=i)
                for i, t in enumerate(arrivals)]
-    duration = (float(arrivals[-1]) if len(arrivals) else 0.0) + 4 * ccfg.slo
+    # max(), not arrivals[-1]: arrivals need not be pre-sorted, and the
+    # router parity path bills replica spans to this same horizon
+    duration = (float(max(arrivals)) if len(arrivals) else 0.0) + 4 * ccfg.slo
 
     counts = replica_worker_counts(ccfg.n_replicas, ccfg.workers_per_replica)
     engines = build_engines(profile, policy, ccfg.n_replicas, counts,
                             ccfg.engine_config())
     coord = ClusterCoordinator(engines, make_placement(ccfg.placement),
                                placement_seed=ccfg.placement_seed)
+
+    autoscaler = None
+    if ccfg.autoscale is not None:
+        acfg = ccfg.autoscale
+        if ccfg.n_replicas > acfg.max_replicas:
+            raise ValueError(
+                f"{ccfg.n_replicas} initial replicas exceed "
+                f"max_replicas={acfg.max_replicas}")
+        if acfg.spawn_workers is None and len(set(counts)) > 1:
+            raise ValueError(
+                "heterogeneous worker pools need an explicit "
+                "AutoscaleConfig.spawn_workers (no sane default size "
+                "for spawned replicas)")
+        spawn_workers = (acfg.spawn_workers if acfg.spawn_workers
+                         else counts[0])
+        ecfg = ccfg.engine_config()
+
+        def engine_factory(rid: int) -> SchedulingEngine:
+            return SchedulingEngine(profile, policy.clone(), ecfg,
+                                    worker_ids=range(spawn_workers),
+                                    replica_id=rid)
+
+        autoscaler = ClusterAutoscaler(coord, acfg, engine_factory,
+                                       slo=ccfg.slo)
+
     drive_cluster(coord, queries,
                   {rid: range(counts[rid])
                    for rid in range(ccfg.n_replicas)},
                   replica_deaths=ccfg.replica_deaths,
-                  fault_times=ccfg.fault_times)
+                  fault_times=ccfg.fault_times,
+                  autoscaler=autoscaler)
 
-    dispatches = sorted((d for e in engines for d in e.dispatches),
+    if autoscaler is not None:
+        autoscaler.finalize(duration)
+        spans = autoscaler.replica_spans()
+        scale_events = list(autoscaler.events)
+    else:
+        spans = {rid: duration for rid in range(coord.n_replicas)}
+        scale_events = []
+    dispatches = sorted((d for e in coord.engines for d in e.dispatches),
                         key=lambda d: (d.t, d.replica, d.worker))
     return ClusterResult(queries=coord.queries, dispatches=dispatches,
-                         duration=duration, n_replicas=ccfg.n_replicas,
-                         n_joins=sum(e.n_joins for e in engines))
+                         duration=duration, n_replicas=coord.n_replicas,
+                         n_joins=sum(e.n_joins for e in coord.engines),
+                         replica_spans=spans, scale_events=scale_events)

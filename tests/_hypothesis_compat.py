@@ -13,10 +13,25 @@ get shrinking and adversarial example generation.
 """
 from __future__ import annotations
 
+import os
+
+# REPRO_MAX_EXAMPLES caps every property test's example count (both
+# branches below honor it). Set by tools/serving_coverage.py: line
+# coverage doesn't need 200 repetitions of the same lines, and the
+# stdlib tracer makes each one ~40x slower. Unset in tier-1 CI.
+_EXAMPLE_CAP = int(os.environ.get("REPRO_MAX_EXAMPLES", "0"))
+
 try:
-    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import given  # noqa: F401
+    from hypothesis import settings as _hyp_settings
     from hypothesis import strategies  # noqa: F401
     HAVE_HYPOTHESIS = True
+
+    def settings(*args, **kwargs):
+        if _EXAMPLE_CAP and kwargs.get("max_examples"):
+            kwargs["max_examples"] = min(kwargs["max_examples"],
+                                         _EXAMPLE_CAP)
+        return _hyp_settings(*args, **kwargs)
 except ModuleNotFoundError:
     import functools
     import inspect
@@ -55,6 +70,9 @@ except ModuleNotFoundError:
         sampled_from=_sampled_from)
 
     def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_):
+        if _EXAMPLE_CAP:
+            max_examples = min(max_examples, _EXAMPLE_CAP)
+
         def deco(fn):
             fn._max_examples = max_examples
             return fn

@@ -1,0 +1,321 @@
+"""Autoscaler scaling invariants (hypothesis property tests + units).
+
+The lifecycle properties the cluster plane must keep under ARBITRARY
+spawn/decommission sequences (driven through the production actuation
+path by the Scripted policy):
+
+  * query conservation — every admitted query completes or is recorded
+    as a drop, never lost, never duplicated;
+  * replica bounds — the committed count stays within [min, max];
+  * cooldown — every decommission trails the previous scale event by
+    at least the cooldown;
+  * EDF order — a decommissioned replica's drained queue re-routes
+    most-urgent-first;
+  * cold start — a spawned replica serves nothing before its READY;
+  * disabled == static — an autoscaler that never acts replays the
+    autoscaler-less cluster schedule byte-identically.
+"""
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.serving import cluster, policies, profiler, simulator, traces
+from repro.serving.autoscaler import (AutoscaleConfig, ClusterAutoscaler,
+                                      QueuePressure, Scripted, make_scaling)
+from repro.serving.engine import SchedulingEngine
+from repro.serving.queue import Query
+
+PROF = profiler.build_profile(get_config("ofa_resnet"))
+ARR = traces.bursty_trace(400, 1600, 4, 2.0, seed=23)
+
+SCRIPT_EVENTS = st.lists(
+    st.tuples(st.floats(0.0, 0.6), st.sampled_from([1, -1])),
+    min_size=1, max_size=12)
+
+
+def _sim(arr, init, acfg, **ccfg_kw):
+    ccfg = simulator.ClusterConfig(
+        n_replicas=init, workers_per_replica=2, placement="round_robin",
+        slo=0.036, autoscale=acfg, **ccfg_kw)
+    return simulator.simulate_cluster(arr, PROF, policies.SlackFit(), ccfg)
+
+
+def _scripted(script, min_r=1, max_r=5, cold_start=0.02, cooldown=0.0,
+              interval=0.01):
+    return AutoscaleConfig(min_replicas=min_r, max_replicas=max_r,
+                           policy="scripted", script=script,
+                           cooldown=cooldown, cold_start=cold_start,
+                           interval=interval)
+
+
+class TestScalingInvariants:
+    """The acceptance property: conservation + bounds + EDF drain order
+    over 200+ generated scale-event sequences."""
+
+    @given(st.integers(0, 10_000), SCRIPT_EVENTS, st.integers(1, 3))
+    @settings(max_examples=200, deadline=None)
+    def test_conservation_bounds_and_edf_order(self, seed, script, init):
+        rng = np.random.default_rng(seed)
+        arr = np.sort(rng.uniform(0, 0.5, size=int(rng.integers(1, 120))))
+        res = _sim(arr, init, _scripted(script))
+
+        # conservation: every query resolves exactly once, none lost
+        assert len(res.queries) == len(arr)
+        served = sum(1 for q in res.queries
+                     if q.finish is not None and not q.dropped)
+        dropped = sum(1 for q in res.queries if q.dropped)
+        assert served + dropped == len(arr)
+        # ... and none duplicated (one record per qid)
+        qids = [r.qid for r in res.records]
+        assert qids == sorted(set(qids)) and len(qids) == len(arr)
+
+        # committed replica count within [min, max] after every
+        # policy-driven lifecycle event
+        for e in res.scale_events:
+            if e.kind in ("spawn", "ready", "decommission"):
+                assert 1 <= e.n_committed <= 5
+
+        # decommission-drained queries keep EDF (deadline) order
+        qmap = {q.qid: q for q in res.queries}
+        for e in res.scale_events:
+            if e.kind == "decommission":
+                deadlines = [qmap[qid].deadline for qid in e.drained]
+                assert deadlines == sorted(deadlines)
+
+    @given(st.integers(0, 10_000), SCRIPT_EVENTS)
+    @settings(max_examples=40, deadline=None)
+    def test_conservation_with_continuous_batching(self, seed, script):
+        """Scale events racing join windows still conserve queries."""
+        rng = np.random.default_rng(seed)
+        arr = np.sort(rng.uniform(0, 0.4, size=int(rng.integers(1, 100))))
+        res = _sim(arr, 2, _scripted(script), continuous_batching=True)
+        served = sum(1 for q in res.queries
+                     if q.finish is not None and not q.dropped)
+        dropped = sum(1 for q in res.queries if q.dropped)
+        assert served + dropped == len(arr)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_cooldown_respected(self, seed):
+        """Reactive policy runs: every decommission trails the previous
+        scale event (spawn or decommission) by >= cooldown."""
+        rng = np.random.default_rng(seed)
+        arr = np.sort(rng.uniform(0, 1.0, size=int(rng.integers(50, 400))))
+        cooldown = 0.15
+        acfg = AutoscaleConfig(min_replicas=1, max_replicas=5,
+                               cooldown=cooldown, interval=0.01)
+        res = _sim(arr, 2, acfg)
+        prev = None
+        for e in res.scale_events:
+            if e.kind == "decommission":
+                assert prev is None or e.t - prev >= cooldown - 1e-12
+            if e.kind in ("spawn", "decommission"):
+                prev = e.t
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_cold_start_gates_serving(self, seed):
+        """A spawned replica dispatches nothing before its READY."""
+        rng = np.random.default_rng(seed)
+        arr = np.sort(rng.uniform(0, 0.5, size=int(rng.integers(20, 150))))
+        res = _sim(arr, 1, _scripted([(0.1, 1), (0.2, 1)],
+                                     cold_start=0.05))
+        ready_at = {e.rid: e.t for e in res.scale_events
+                    if e.kind == "ready"}
+        for d in res.dispatches:
+            if d.replica in ready_at:
+                assert d.t >= ready_at[d.replica]
+
+
+class TestScalingBounds:
+    def test_spawns_clamped_at_max(self):
+        res = _sim(ARR, 1, _scripted([(0.05 * i, 1) for i in range(12)],
+                                     max_r=3))
+        assert res.n_replicas <= 3
+        assert max(e.n_committed for e in res.scale_events) == 3
+
+    def test_decommissions_clamped_at_min(self):
+        res = _sim(ARR, 3, _scripted([(0.05 * i, -1) for i in range(12)],
+                                     min_r=2))
+        decoms = [e for e in res.scale_events if e.kind == "decommission"]
+        assert len(decoms) == 1                   # 3 -> 2, then clamped
+        assert min(e.n_committed for e in res.scale_events) == 2
+
+    def test_floor_is_topped_up_not_just_gated(self):
+        """min_replicas is an invariant, not only a scale-down gate: a
+        cluster started below the floor spawns up to it on the first
+        tick, whatever the policy says."""
+        quiet = traces.bursty_trace(50, 20, 1, 1.0, seed=3)
+        res = _sim(quiet, 1, AutoscaleConfig(min_replicas=3,
+                                             max_replicas=6))
+        spawns = [e for e in res.scale_events if e.kind == "spawn"]
+        assert len(spawns) >= 2                   # 1 -> 3 at least
+        assert res.scale_events[-1].n_committed >= 3
+        assert all(e.n_committed >= 1 for e in res.scale_events)
+
+    def test_total_death_respawns_to_the_floor(self):
+        """A cluster wiped out by deaths is topped back up to
+        min_replicas: after the replacements' cold start, service
+        resumes instead of dropping every remaining arrival."""
+        rng = np.random.default_rng(0)
+        arr = np.sort(rng.uniform(0, 1.0, size=200))
+        res = _sim(arr, 1, AutoscaleConfig(min_replicas=1, max_replicas=4),
+                   replica_deaths={0: 0.1})
+        kinds = [e.kind for e in res.scale_events]
+        assert "death" in kinds and "spawn" in kinds
+        served = sum(1 for q in res.queries
+                     if q.finish is not None and not q.dropped)
+        dropped = sum(1 for q in res.queries if q.dropped)
+        assert served + dropped == 200            # conserved
+        # queries arriving after the replacement's cold start are served
+        assert any(q.arrival > 0.3 and q.finish is not None
+                   for q in res.queries)
+        assert served > 100
+
+    def test_initial_count_above_max_rejected(self):
+        with pytest.raises(ValueError):
+            _sim(ARR, 5, AutoscaleConfig(min_replicas=1, max_replicas=3))
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            AutoscaleConfig(min_replicas=0).validate()
+        with pytest.raises(ValueError):
+            AutoscaleConfig(min_replicas=3, max_replicas=2).validate()
+        with pytest.raises(ValueError):
+            AutoscaleConfig(interval=0.0).validate()
+        with pytest.raises(ValueError):
+            make_scaling(AutoscaleConfig(policy="nope"), slo=0.036)
+
+
+class TestDisabledEquivalence:
+    """The static-replica acceptance guarantee: an autoscaler that never
+    acts replays the autoscaler-less (PR 3) schedule byte-identically,
+    and autoscale=None is exactly the PR 3 code path."""
+
+    def test_never_acting_autoscaler_is_byte_identical(self):
+        base = _sim(ARR, 3, None)
+        idle = _sim(ARR, 3, _scripted([], min_r=3, max_r=3))
+        assert idle.records == base.records
+        assert [(d.t, d.replica, d.worker, d.batch, d.pareto_idx)
+                for d in idle.dispatches] == \
+               [(d.t, d.replica, d.worker, d.batch, d.pareto_idx)
+                for d in base.dispatches]
+        assert idle.scale_events == []
+
+    def test_min_equals_max_pins_reactive_policy(self):
+        """min == max leaves the reactive policy no room: same
+        schedule as no autoscaler at all."""
+        base = _sim(ARR, 2, None)
+        pinned = _sim(ARR, 2, AutoscaleConfig(min_replicas=2,
+                                              max_replicas=2))
+        assert pinned.records == base.records
+        assert all(e.kind not in ("spawn", "decommission")
+                   for e in pinned.scale_events)
+
+
+class TestReactivePolicies:
+    def test_queue_pressure_scales_up_out_of_overload(self):
+        """Starting under-provisioned on a hot trace, queue_pressure
+        spawns and beats the static under-provisioned cluster."""
+        hot = traces.bursty_trace(1400, 5600, 8, 2.0, seed=7)
+        static = _sim(hot, 1, None)
+        auto = _sim(hot, 1, AutoscaleConfig(min_replicas=1, max_replicas=6))
+        assert any(e.kind == "spawn" for e in auto.scale_events)
+        assert auto.slo_attainment > static.slo_attainment + 0.2
+
+    def test_queue_pressure_scales_down_when_idle(self):
+        """A trace that goes quiet gets its reinforcements trimmed."""
+        quiet = traces.bursty_trace(400, 100, 1, 3.0, seed=7)
+        auto = _sim(quiet, 4, AutoscaleConfig(min_replicas=1,
+                                              max_replicas=6))
+        assert any(e.kind == "decommission" for e in auto.scale_events)
+        assert auto.replica_seconds < 4 * auto.duration
+
+    def test_slo_headroom_scales_up_on_misses(self):
+        hot = traces.bursty_trace(1400, 5600, 8, 2.0, seed=7)
+        auto = _sim(hot, 1, AutoscaleConfig(min_replicas=1, max_replicas=6,
+                                            policy="slo_headroom",
+                                            window=0.5))
+        assert any(e.kind == "spawn" for e in auto.scale_events)
+
+    def test_decommission_picks_least_loaded_highest_rid(self):
+        """Victim selection: least outstanding work, ties to the
+        highest (latest-spawned) rid."""
+        engines = [SchedulingEngine(PROF, policies.SlackFit(),
+                                    worker_ids=range(2), replica_id=rid)
+                   for rid in range(3)]
+        for i in range(5):
+            engines[0].admit(Query(deadline=1.0, seq=0, qid=i))
+        coord = cluster.ClusterCoordinator(engines, cluster.RoundRobin())
+        auto = ClusterAutoscaler(
+            coord, AutoscaleConfig(min_replicas=1, max_replicas=3,
+                                   policy="scripted", script=[(0.0, -1)],
+                                   cooldown=0.0),
+            engine_factory=lambda rid: SchedulingEngine(
+                PROF, policies.SlackFit(), worker_ids=range(2),
+                replica_id=rid))
+        events = auto.tick(auto.cfg.interval)
+        assert [e.kind for e in events] == ["decommission"]
+        assert events[0].rid == 2       # 1 and 2 empty: highest rid goes
+
+    def test_decommission_rejoins_queue_through_placement(self):
+        """The drained queue lands on survivors (EDF order), nothing
+        marked dropped."""
+        engines = [SchedulingEngine(PROF, policies.SlackFit(),
+                                    worker_ids=range(2), replica_id=rid)
+                   for rid in range(2)]
+        heavy = [Query(deadline=1.0 + i, seq=0, qid=i) for i in range(6)]
+        light = [Query(deadline=5.0 + i, seq=0, qid=10 + i)
+                 for i in range(3)]
+        for q in heavy:
+            engines[0].admit(q)
+        for q in light:
+            engines[1].admit(q)
+        coord = cluster.ClusterCoordinator(engines, cluster.RoundRobin())
+        coord.queries.extend(heavy + light)
+        auto = ClusterAutoscaler(
+            coord, AutoscaleConfig(min_replicas=1, max_replicas=2,
+                                   policy="scripted", script=[(0.0, -1)],
+                                   cooldown=0.0),
+            engine_factory=lambda rid: None)
+        (ev,) = auto.tick(auto.cfg.interval)
+        assert ev.kind == "decommission" and ev.rid == 1  # lighter one
+        assert list(ev.drained) == [q.qid for q in light]  # EDF order
+        assert engines[0].queue_depth() == 9             # re-routed
+        assert not any(q.dropped for q in light)
+
+    def test_scripted_relative_times_anchor_at_epoch(self):
+        pol = Scripted([(0.5, 1)])
+        pol.reset()
+        pol.epoch = 100.0               # wall-clock style origin
+        assert pol.decide(None, [(0, None)], 100.4)[0] == 0
+        assert pol.decide(None, [(0, None)], 100.6)[0] == 1
+
+
+class TestReplicaSecondsAccounting:
+    def test_static_runs_bill_full_duration(self):
+        res = _sim(ARR, 3, None)
+        assert res.replica_spans == {rid: res.duration for rid in range(3)}
+        assert res.replica_seconds == pytest.approx(3 * res.duration)
+
+    def test_transient_replica_billed_spawn_to_decommission(self):
+        res = _sim(ARR, 1, _scripted([(0.5, 1), (1.2, -1)],
+                                     cold_start=0.05))
+        spawn = next(e for e in res.scale_events if e.kind == "spawn")
+        decom = next(e for e in res.scale_events
+                     if e.kind == "decommission")
+        assert decom.rid == spawn.rid
+        assert res.replica_spans[spawn.rid] == \
+            pytest.approx(decom.t - spawn.t)
+        assert res.replica_spans[0] == pytest.approx(res.duration)
+
+    def test_stats_reports_efficiency_figure(self):
+        res = _sim(ARR, 2, AutoscaleConfig(min_replicas=1, max_replicas=4))
+        st_ = res.stats()
+        assert st_["replica_seconds"] == pytest.approx(res.replica_seconds)
+        ok = sum(1 for q in res.queries if q.finish is not None
+                 and q.finish <= q.deadline and not q.dropped)
+        assert st_["goodput_per_replica_second"] == \
+            pytest.approx(ok / res.replica_seconds)

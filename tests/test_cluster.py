@@ -9,6 +9,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.serving import cluster, policies, profiler, simulator, traces
+from repro.serving.autoscaler import AutoscaleConfig
 from repro.serving.engine import EngineConfig, SchedulingEngine, VirtualClock
 from repro.serving.queue import Query
 from repro.serving.runtime import ClusterRouter, WorkerHandle
@@ -24,11 +25,12 @@ def _groups(n_replicas, workers_per_replica):
 
 
 def _virtual_cluster(n_replicas, workers_per_replica, placement,
-                     continuous=False):
+                     continuous=False, autoscale=None):
     return ClusterRouter(
         PROF, policies.SlackFit(), _groups(n_replicas, workers_per_replica),
         clock=VirtualClock(), placement=placement,
-        engine_cfg=EngineConfig(continuous_batching=continuous))
+        engine_cfg=EngineConfig(continuous_batching=continuous),
+        autoscale=autoscale)
 
 
 class TestClusterParity:
@@ -68,6 +70,95 @@ class TestClusterParity:
         router = _virtual_cluster(2, 2, "least_loaded")
         recs = router.run_virtual(ARR, slo_s=0.036, fault_times=faults)
         assert recs == sim.records
+
+
+class TestAutoscaledParity:
+    """Extends the PR 3 guarantee: with autoscaling ENABLED, the
+    ClusterRouter (virtual clock) and simulate_cluster still produce
+    identical per-query completion records AND identical scale-event
+    timelines — scaling lives in the coordinator layer, transports stay
+    thin over it."""
+
+    @pytest.mark.parametrize("placement", sorted(cluster.PLACEMENTS))
+    def test_parity_with_reactive_autoscaling(self, placement):
+        def acfg():
+            return AutoscaleConfig(min_replicas=1, max_replicas=6,
+                                   cooldown=0.2)
+        ccfg = simulator.ClusterConfig(
+            n_replicas=2, workers_per_replica=2, placement=placement,
+            slo=0.036, autoscale=acfg())
+        sim = simulator.simulate_cluster(ARR, PROF, policies.SlackFit(),
+                                         ccfg)
+        router = _virtual_cluster(2, 2, placement, autoscale=acfg())
+        recs = router.run_virtual(ARR, slo_s=0.036)
+        assert recs == sim.records
+        # non-vacuous: the autoscaler actually scaled on this trace...
+        assert any(e.kind == "spawn" for e in sim.scale_events)
+        # ... both transports actuated the identical event timeline...
+        assert [(e.t, e.kind, e.rid) for e in sim.scale_events] == \
+               [(e.t, e.kind, e.rid) for e in router.autoscaler.events]
+        # ... and bill identical replica-seconds (same nominal horizon)
+        assert router.autoscaler.replica_spans() == sim.replica_spans
+
+    def test_parity_scale_down_racing_inflight_batch(self):
+        """A scripted decommission lands while the victim has batches
+        in flight: both transports must drain them identically (the
+        batches finish on the decommissioned replica; its queue
+        re-routes)."""
+        def acfg():
+            return AutoscaleConfig(
+                min_replicas=1, max_replicas=4, policy="scripted",
+                script=[(0.25, 1), (0.8, -1)], cooldown=0.0,
+                cold_start=0.02)
+        ccfg = simulator.ClusterConfig(
+            n_replicas=2, workers_per_replica=2, placement="round_robin",
+            slo=0.036, autoscale=acfg())
+        sim = simulator.simulate_cluster(ARR, PROF, policies.SlackFit(),
+                                         ccfg)
+        router = _virtual_cluster(2, 2, "round_robin", autoscale=acfg())
+        assert router.run_virtual(ARR, slo_s=0.036) == sim.records
+        decom = next(e for e in sim.scale_events
+                     if e.kind == "decommission")
+        # the race really happened: an in-flight batch completed on the
+        # decommissioned replica AFTER its decommission...
+        assert any(q.replica == decom.rid and not q.dropped
+                   and q.finish is not None and q.finish > decom.t
+                   for q in sim.queries)
+        # ...and nothing was lost to it
+        assert all(q.finish is not None or q.dropped for q in sim.queries)
+
+    def test_parity_at_non_default_slo(self):
+        """The scaling thresholds normalize to the transport's SLO, so
+        parity must hold away from the 36 ms default too (the router
+        takes it via its ``slo`` parameter, the simulator via
+        ClusterConfig.slo)."""
+        def acfg():
+            return AutoscaleConfig(min_replicas=1, max_replicas=6,
+                                   cooldown=0.2)
+        ccfg = simulator.ClusterConfig(
+            n_replicas=2, workers_per_replica=2, placement="round_robin",
+            slo=0.1, autoscale=acfg())
+        sim = simulator.simulate_cluster(ARR, PROF, policies.SlackFit(),
+                                         ccfg)
+        router = ClusterRouter(
+            PROF, policies.SlackFit(), _groups(2, 2), clock=VirtualClock(),
+            placement="round_robin", autoscale=acfg(), slo=0.1)
+        assert router.run_virtual(ARR, slo_s=0.1) == sim.records
+        assert [(e.t, e.kind, e.rid) for e in sim.scale_events] == \
+               [(e.t, e.kind, e.rid) for e in router.autoscaler.events]
+
+    def test_parity_with_autoscaling_and_continuous_batching(self):
+        def acfg():
+            return AutoscaleConfig(min_replicas=1, max_replicas=5,
+                                   cooldown=0.2)
+        ccfg = simulator.ClusterConfig(
+            n_replicas=2, workers_per_replica=2, placement="round_robin",
+            slo=0.036, continuous_batching=True, autoscale=acfg())
+        sim = simulator.simulate_cluster(ARR, PROF, policies.SlackFit(),
+                                         ccfg)
+        router = _virtual_cluster(2, 2, "round_robin", continuous=True,
+                                  autoscale=acfg())
+        assert router.run_virtual(ARR, slo_s=0.036) == sim.records
 
 
 class TestSingleReplicaUnchanged:
@@ -215,6 +306,47 @@ class TestPlacementSemantics:
         tight = Query(deadline=PROF.lat.min() * 2, seq=0)
         assert coord.select(tight, 0.0) == 0
 
+    def test_slack_aware_learns_bimodal_threshold(self):
+        """ROADMAP fix: the tight/relaxed split is learned from the
+        observed slack distribution. A bimodal trace whose modes both
+        sit ABOVE the fixed 10x-fastest-service multiple misroutes
+        under the fixed rule (the tighter mode round-robins straight
+        onto the loaded replica); the rolling-median threshold splits
+        the modes correctly."""
+        min_s = PROF.lat.min()
+        tight_mode, relaxed_mode = 20 * min_s, 2000 * min_s
+
+        # fixed multiple: 20x min_service > 10x threshold -> "relaxed"
+        # -> round-robin -> first pick is the loaded replica 0
+        fixed = self._coord([6, 0, 2], cluster.SlackAware(adaptive=False),
+                            deadline=min_s)
+        assert fixed.select(Query(deadline=tight_mode, seq=0), 0.0) == 0
+
+        # adaptive: warm the rolling median on the bimodal mix, then
+        # the tighter mode routes by earliest start (empty replica 1)
+        adaptive = self._coord([6, 0, 2], cluster.SlackAware(),
+                               deadline=min_s)
+        for i in range(40):
+            d = tight_mode if i % 2 == 0 else relaxed_mode
+            adaptive.select(Query(deadline=d, seq=0), 0.0)
+        assert adaptive.select(
+            Query(deadline=tight_mode, seq=0), 0.0) == 1
+        # the relaxed mode still spreads round-robin
+        picks = [adaptive.select(Query(deadline=relaxed_mode, seq=0), 0.0)
+                 for _ in range(3)]
+        assert len(set(picks)) == 3
+
+    def test_slack_aware_uniform_slack_routes_by_start(self):
+        """Degenerate (unimodal) distribution: every query at the same
+        SLO. The learned median equals that slack, `<=` keeps them all
+        tight, so routing matches the paper-regime fixed rule:
+        earliest projected start."""
+        coord = self._coord([6, 0, 2], cluster.SlackAware(min_history=4),
+                            deadline=PROF.lat.min())
+        for _ in range(8):
+            coord.select(Query(deadline=0.036, seq=0), 0.0)
+        assert coord.select(Query(deadline=0.036, seq=0), 0.0) == 1
+
     def test_projected_drain_reflects_capacity(self):
         """Same backlog, more workers -> shorter projected drain (the
         signal that lets slack-aware placement absorb heterogeneity)."""
@@ -304,6 +436,39 @@ class TestClusterRouterAsync:
         cr, result = asyncio.run(main())
         assert result[0] is not None              # served, not lost
         assert cr.coord.queries[0].replica == 1   # by the survivor
+
+    def test_live_autoscale_spawns_and_decommissions(self):
+        """The wall-clock autoscale control loop: a scripted spawn
+        turns a new Router routable after its cold start and serves
+        real queries; the scripted decommission re-routes its queue
+        (payloads travel) and every query still resolves."""
+        async def main():
+            cr = ClusterRouter(
+                PROF, policies.SlackFit(), _groups(1, 1),
+                placement="round_robin",
+                autoscale=AutoscaleConfig(
+                    min_replicas=1, max_replicas=3, interval=0.02,
+                    cold_start=0.02, cooldown=0.05, policy="scripted",
+                    script=[(0.04, 1), (0.30, -1)]))
+            await cr.start()
+            futs = []
+            for _ in range(30):
+                futs.append(await cr.submit(np.ones(4), slo_s=2.0))
+                await asyncio.sleep(0.015)
+            results = await asyncio.gather(*futs)
+            await cr.drain()
+            return cr, results
+
+        cr, results = asyncio.run(main())
+        kinds = [e.kind for e in cr.autoscaler.events]
+        assert kinds.count("spawn") == 1 and kinds.count("ready") == 1
+        assert kinds.count("decommission") == 1
+        st = cr.stats()
+        assert st["served"] == 30                 # conservation, live
+        assert all(p is not None for p, _ in results)
+        # the spawned replica actually served between ready and decom
+        assert {q.replica for q in cr.coord.queries} == {0, 1}
+        assert st["replica_seconds"] > 0
 
     def test_submit_after_total_death_resolves_as_dropped(self):
         """Coordinator semantics under total cluster failure: the query

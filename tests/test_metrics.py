@@ -4,6 +4,8 @@ the cluster aggregation (per-replica stats, load imbalance) is exact on
 hand-built cases."""
 import math
 
+import pytest
+
 from repro.serving import metrics
 from repro.serving.queue import Query
 
@@ -68,3 +70,63 @@ class TestClusterAggregation:
         assert metrics.load_imbalance(qs, n_replicas=4) == 3.0
         # without the forced denominator it's a single-replica set
         assert metrics.load_imbalance(qs) == 0.0
+
+
+class TestTransientReplicaImbalance:
+    """Autoscaled runs: replicas that existed only part of the run are
+    judged on their serving RATE over their own lifetime, never as
+    0-query phantoms dragging the mean (the replica_spans path)."""
+
+    def test_rate_based_imbalance_is_lifetime_fair(self):
+        # replica 0: 8 queries over the full 2 s; replica 1 (spawned
+        # late): 2 queries over its 0.5 s life. Same 4 q/s rate ->
+        # perfectly balanced...
+        qs = [_q(i, replica=0) for i in range(8)]
+        qs += [_q(10 + i, replica=1) for i in range(2)]
+        spans = {0: 2.0, 1: 0.5}
+        assert metrics.load_imbalance(qs, replica_spans=spans) == 0.0
+        # ...where the count-based rule would report 8/5 - 1 = 0.6
+        assert metrics.load_imbalance(qs, n_replicas=2) == \
+            pytest.approx(0.6)
+
+    def test_zero_lifetime_replicas_are_excluded(self):
+        qs = [_q(i, replica=0) for i in range(8)]
+        # a replica with no lifetime can't be a phantom denominator;
+        # one surviving rate -> 0.0 by the 1-replica rule
+        spans = {0: 2.0, 1: 0.0}
+        assert metrics.load_imbalance(qs, replica_spans=spans) == 0.0
+
+    def test_single_replica_is_exactly_zero(self):
+        qs = [_q(i, replica=0) for i in range(5)]
+        assert metrics.load_imbalance(qs, n_replicas=1) == 0.0
+        assert metrics.load_imbalance(qs, replica_spans={0: 3.0}) == 0.0
+
+    def test_zero_records_is_exactly_zero(self):
+        assert metrics.load_imbalance([], n_replicas=4) == 0.0
+        assert metrics.load_imbalance([], replica_spans={0: 1.0,
+                                                         1: 1.0}) == 0.0
+
+    def test_skew_within_lifetimes_still_detected(self):
+        # equal lifetimes, unequal load: 6 vs 2 over 1 s each ->
+        # rates (6, 2), mean 4, max 6 -> 0.5 (matches the count rule)
+        qs = [_q(i, replica=0) for i in range(6)]
+        qs += [_q(10 + i, replica=1) for i in range(2)]
+        spans = {0: 1.0, 1: 1.0}
+        assert metrics.load_imbalance(qs, replica_spans=spans) == 0.5
+
+    def test_per_replica_stats_reports_idle_replicas(self):
+        qs = [_q(0, replica=0), _q(1, replica=0)]
+        per = metrics.per_replica_stats(qs, replica_ids=[0, 1, 2])
+        assert sorted(per) == [0, 1, 2]
+        assert per[0]["served"] == 2.0
+        assert per[1]["served"] == 0.0 and per[2]["served"] == 0.0
+        assert all(math.isfinite(v) for rid in (1, 2)
+                   for v in per[rid].values())
+
+    def test_cluster_summarize_with_spans_adds_efficiency(self):
+        qs = [_q(i, replica=0) for i in range(4)]
+        s = metrics.cluster_summarize(qs, n_replicas=1,
+                                      replica_spans={0: 2.0})
+        assert s["replica_seconds"] == 2.0
+        assert s["goodput_per_replica_second"] == 2.0   # 4 ok / 2 s
+        assert 0 in s["replicas"]

@@ -96,6 +96,40 @@ class TestOracle:
             assert got >= 0.70 * opt, (trial, got, opt)
 
 
+class TestBaselinePolicies:
+    """The §6.1 baseline policies make sane decisions (they back the
+    benchmark shoot-outs and serve.py's --policy choices)."""
+
+    def test_maxacc_takes_top_accuracy_under_generous_slack(self):
+        dec = policies.MaxAcc().choose(PROF, float(PROF.lat.max()) * 2, 64)
+        assert dec.pareto_idx == int(np.argmax(PROF.accs))
+        assert dec.batch_size >= 1
+
+    def test_maxacc_fits_the_slack_when_tight(self):
+        slack = float(PROF.lat.min()) * 1.01
+        dec = policies.MaxAcc().choose(PROF, slack, 4)
+        assert float(PROF.lat[dec.pareto_idx, 0]) <= slack
+
+    def test_maxbatch_prefers_batch_then_accuracy(self):
+        dec = policies.MaxBatch().choose(PROF, float(PROF.lat.max()), 64)
+        fastest = int(PROF.lat[:, 0].argmin())
+        fit = np.where(PROF.lat[fastest] <= float(PROF.lat.max()))[0]
+        assert dec.batch_size == PROF.batches[int(fit[-1])]
+
+    def test_clipper_fixed_sticks_to_its_subnet(self):
+        pol = policies.ClipperFixed(3)
+        for slack in (0.01, 0.05, 1.0):
+            assert pol.choose(PROF, slack, 16).pareto_idx == 3
+        clone = pol.clone()
+        assert clone.pareto_idx == 3 and clone.name == pol.name
+
+    def test_infaas_always_min_accuracy(self):
+        pol = policies.INFaaSMinCost()
+        lo = int(np.argmin(PROF.accs))
+        assert pol.choose(PROF, 0.05, 8).pareto_idx == lo
+        assert pol.choose(PROF, 5.0, 200).pareto_idx == lo
+
+
 def test_policy_decision_is_fast():
     """Sub-millisecond control decisions (paper §A.3 requirement)."""
     import time
