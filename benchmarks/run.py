@@ -23,8 +23,8 @@ from benchmarks import (bench_acceleration, bench_actuation,
                         bench_cluster_scaleout, bench_continuous_batching,
                         bench_ilp_oracle, bench_control_space,
                         bench_fault_tolerance, bench_maf, bench_memory,
-                        bench_pareto, bench_policies, bench_scalability,
-                        bench_throughput_range)
+                        bench_pareto, bench_policies, bench_predictive,
+                        bench_scalability, bench_throughput_range)
 from benchmarks.common import banner, save, table
 
 ALL = {
@@ -37,6 +37,7 @@ ALL = {
     "continuous_batching": bench_continuous_batching.run,  # §5 in-flight joins
     "cluster_scaleout": bench_cluster_scaleout.run,  # multi-replica plane
     "autoscaling": bench_autoscaling.run,        # reactive replica scaling
+    "predictive": bench_predictive.run,          # forecast-led scaling + joins
     "acceleration": bench_acceleration.run,      # Fig 9
     "maf": bench_maf.run,                        # Fig 10
     "fault_tolerance": bench_fault_tolerance.run,  # Fig 11a

@@ -12,6 +12,12 @@ cluster plane — N engines behind the coordinator, placement chosen by
 (spawn/decommission from load signals, ``--min-replicas`` /
 ``--max-replicas`` bounds, ``--scale-policy`` signal) and reports
 replica-seconds, the scale-event log, and goodput per replica-second.
+
+Predictive serving (serving/forecast.py): ``--scale-policy predictive``
+spawns ahead of the arrival forecast crossing capacity (reactive
+fallback without signal); ``--predictive-joins`` opens forecast-led
+join windows even at saturation; ``--forecast-window`` sets the shared
+estimator window. The forecast snapshot rides the output JSON.
 """
 from __future__ import annotations
 
@@ -21,6 +27,7 @@ import json
 from repro.configs import get_config
 from repro.serving import cluster, policies, profiler, simulator, traces
 from repro.serving.autoscaler import SCALINGS, AutoscaleConfig
+from repro.serving.forecast import ForecastConfig
 
 
 def main():
@@ -54,6 +61,14 @@ def main():
     ap.add_argument("--continuous-batching", action="store_true",
                     help="keep forming batches open to in-flight joins "
                          "within the policy's latency budget (paper §5)")
+    ap.add_argument("--predictive-joins", action="store_true",
+                    help="forecast-led join windows: hold a forming batch "
+                         "even on the last free worker when the arrival "
+                         "forecast says a joinable query lands within "
+                         "slack (implies in-flight joins)")
+    ap.add_argument("--forecast-window", type=float, default=0.25,
+                    help="arrival-forecaster sliding window (s), shared "
+                         "by predictive joins and predictive scaling")
     ap.add_argument("--autoscale", action="store_true",
                     help="reactive replica autoscaling: spawn/decommission "
                          "replica groups from load signals (forces cluster "
@@ -108,12 +123,25 @@ def main():
             autoscale = AutoscaleConfig(
                 min_replicas=args.min_replicas,
                 max_replicas=args.max_replicas, policy=args.scale_policy,
-                cold_start=args.cold_start, cooldown=args.scale_cooldown)
+                cold_start=args.cold_start, cooldown=args.scale_cooldown,
+                # the shared estimator window tunes the FORECAST-led
+                # policy only (its reactive fallback stays comparable);
+                # a plain reactive run keeps its own default window
+                **({"rate_window": args.forecast_window}
+                   if args.scale_policy == "predictive" else {}))
+        # one shared ForecastConfig for the engines' predictive join
+        # windows and (via the coordinator_forecast rule) the
+        # coordinator-level forecaster behind --scale-policy predictive
+        forecast = (ForecastConfig(window=args.forecast_window)
+                    if args.predictive_joins
+                    or (autoscale and autoscale.policy == "predictive")
+                    else None)
         ccfg = simulator.ClusterConfig(
             n_replicas=args.replicas, workers_per_replica=args.workers,
             placement=args.placement, placement_seed=args.seed,
             slo=args.slo_ms / 1e3, fault_times=faults, replica_deaths=deaths,
             continuous_batching=args.continuous_batching,
+            predictive_joins=args.predictive_joins, forecast=forecast,
             autoscale=autoscale)
         res = simulator.simulate_cluster(arr, prof, pol, ccfg)
         st = res.stats()
@@ -121,6 +149,10 @@ def main():
                  "load_imbalance": st["load_imbalance"],
                  "per_replica_served": {r: v["served"]
                                         for r, v in st["replicas"].items()}}
+        if res.forecast is not None:
+            extra["forecast"] = {k: None if v is None else round(v, 4)
+                                 for k, v in res.forecast.items()}
+            extra["predictive_windows"] = res.n_predictive_windows
         if args.autoscale:
             extra.update({
                 "autoscale_policy": args.scale_policy,
@@ -141,9 +173,14 @@ def main():
         scfg = simulator.SimConfig(n_workers=args.workers,
                                    slo=args.slo_ms / 1e3,
                                    fault_times=faults, seed=args.seed,
-                                   continuous_batching=args.continuous_batching)
+                                   continuous_batching=args.continuous_batching,
+                                   predictive_joins=args.predictive_joins,
+                                   forecast=(ForecastConfig(
+                                       window=args.forecast_window)
+                                       if args.predictive_joins else None))
         res = simulator.simulate(arr, prof, pol, scfg)
-        extra = {}
+        extra = ({"predictive_windows": res.n_predictive_windows}
+                 if args.predictive_joins else {})
     out = {"arch": args.arch, "policy": pol.name, "queries": len(arr),
            "continuous_batching": args.continuous_batching,
            "slo_attainment": res.slo_attainment, "mean_acc": res.mean_acc,

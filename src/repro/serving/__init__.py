@@ -15,6 +15,15 @@ replica-death re-routing; both transports grow cluster counterparts
 Autoscaling (serving/autoscaler.py): a ClusterAutoscaler rides on the
 coordinator's replica-lifecycle surface and spawns / gracefully
 decommissions replica groups from pluggable load signals
-(queue_pressure / slo_headroom), with cold-start actuation,
-replica-seconds accounting, and a scale-event log — same control loop
-on both transports, so autoscaled schedules stay deterministic."""
+(queue_pressure / predictive / slo_headroom), with cold-start
+actuation, replica-seconds accounting, and a scale-event log — same
+control loop on both transports, so autoscaled schedules stay
+deterministic.
+
+Forecasting (serving/forecast.py): one deterministic, clock-agnostic
+ArrivalForecaster (windowed rate + Holt trend + CV² burst detector)
+feeds the predictive scaling policy, the engine's predictive join
+windows at saturation, and coordinator forecast introspection.
+Layering rule: forecasting state lives in forecast.py only —
+coordinator/engines own and feed it, policies consume it, transports
+never mutate it."""

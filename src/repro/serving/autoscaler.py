@@ -36,6 +36,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.serving.cluster import ClusterCoordinator
 from repro.serving.engine import SchedulingEngine
+from repro.serving.forecast import ForecastConfig
 
 
 # --------------------------------------------------------------------------
@@ -80,6 +81,11 @@ class AutoscaleConfig:
     window: float = 1.0
     target_attainment: float = 0.985
     headroom: float = 0.5
+    # predictive: how far ahead the coordinator forecaster is read when
+    # sizing capacity; None -> cold_start + interval, i.e. exactly the
+    # lead time a spawn decided now needs to turn routable before the
+    # forecast load lands
+    horizon: Optional[float] = None
     # scripted policy (tests): explicit (time, +1 | -1) events
     script: Sequence[Tuple[float, int]] = ()
 
@@ -92,6 +98,8 @@ class AutoscaleConfig:
             raise ValueError("interval must be > 0")
         if self.cold_start < 0 or self.cooldown < 0:
             raise ValueError("cold_start/cooldown must be >= 0")
+        if self.horizon is not None and self.horizon < 0:
+            raise ValueError("horizon must be >= 0")
         return self
 
 
@@ -189,11 +197,17 @@ class QueuePressure(ScalingPolicy):
         # arbitrary) so an opening burst reads at full rate
         return n / max(min(self.rate_window, now - self.epoch), 1e-9)
 
+    def _demand_rate(self, coord, now: float) -> float:
+        """The arrivals/sec the capacity controller sizes for — the
+        single hook ``Predictive`` overrides, so there is exactly ONE
+        decide body to keep the hysteresis/kicker semantics in."""
+        return self._arrival_rate(coord, now)
+
     def decide(self, coord, routable, now, warming_workers=0):
         workers = (sum(max(len(e.worker_model), 1) for _, e in routable)
                    + warming_workers)
         sustainable = self._max_tput(routable[0][1]) * self.util_target
-        need = self._arrival_rate(coord, now) / max(sustainable, 1e-9)
+        need = self._demand_rate(coord, now) / max(sustainable, 1e-9)
         usig = need / max(workers, 1)
         queued = sum(e.queue_depth() for _, e in routable)
         qsig = (queued * routable[0][1].min_service
@@ -203,6 +217,53 @@ class QueuePressure(ScalingPolicy):
         if usig < self.down_util and len(routable) > 1:
             return -1, usig
         return 0, usig
+
+
+class Predictive(QueuePressure):
+    """Forecast-led scaling (ROADMAP "predictive scaling policies"):
+    read the coordinator's shared ``ArrivalForecaster`` ``horizon``
+    seconds ahead — the cold start plus one control period, i.e. the
+    lead time a spawn decided *now* needs before the forecast load
+    lands — and size capacity for that forecast rate, so reinforcements
+    finish warming as the burst arrives instead of after it.
+
+    Inherits ``QueuePressure`` as its reactive floor: with no
+    forecaster on the coordinator, or before the forecaster has signal
+    (fewer than ``min_arrivals`` observations, or an idle window), it
+    IS queue_pressure — a forecaster that never fires must replay the
+    reactive schedule byte-identically (guarded in
+    tests/test_autoscaler.py). The queued-work burst kicker stays
+    active either way: a burst faster than any forecast window is a
+    reactive problem, not a forecasting one.
+
+    The utilization signal is ``max(rate_now, forecast_at_horizon)``,
+    driving both directions: on a rising trend the forecast leads (the
+    paper-story spawn-before-the-burst), on a falling or flat one it
+    degrades to exactly the reactive signal — so an unforecastable
+    trace costs nothing (the bench_predictive <= 1.0x replica-seconds
+    gate) and a forecastable one is served ahead of time."""
+
+    name = "predictive"
+
+    def __init__(self, slo: float, up_pressure: float, util_target: float,
+                 down_util: float, rate_window: float, horizon: float):
+        super().__init__(slo, up_pressure, util_target, down_util,
+                         rate_window)
+        self.horizon = float(horizon)
+
+    def _demand_rate(self, coord, now: float) -> float:
+        # the demand signal is the WORSE of now and the forecast at the
+        # actuation horizon: on a rising trend the forecast leads
+        # (spawn before the load lands), on a falling one the current
+        # rate still holds the floor (never trim into a burst that
+        # hasn't finished draining) — so predictive is exactly reactive
+        # plus lead time, and a flat forecast changes nothing. The
+        # whole decide body (thresholds, hysteresis, burst kicker)
+        # stays QueuePressure's.
+        fc = getattr(coord, "forecaster", None)
+        if fc is None or not fc.has_signal(now):
+            return super()._demand_rate(coord, now)
+        return max(fc.rate(now), fc.forecast(now, self.horizon))
 
 
 class SLOHeadroom(ScalingPolicy):
@@ -281,6 +342,8 @@ class Scripted(ScalingPolicy):
 
 SCALINGS: Dict[str, str] = {
     "queue_pressure": "aggregate backlog vs drain capacity (leading)",
+    "predictive": "forecast crossing capacity, cold_start ahead "
+                  "(queue_pressure fallback without signal)",
     "slo_headroom": "windowed attainment + slack headroom (lagging)",
     "scripted": "explicit (t, +1/-1) event list (tests)",
 }
@@ -290,6 +353,11 @@ def make_scaling(cfg: AutoscaleConfig, slo: float) -> ScalingPolicy:
     if cfg.policy == "queue_pressure":
         return QueuePressure(slo, cfg.up_pressure, cfg.util_target,
                              cfg.down_util, cfg.rate_window)
+    if cfg.policy == "predictive":
+        horizon = (cfg.horizon if cfg.horizon is not None
+                   else cfg.cold_start + cfg.interval)
+        return Predictive(slo, cfg.up_pressure, cfg.util_target,
+                          cfg.down_util, cfg.rate_window, horizon)
     if cfg.policy == "slo_headroom":
         return SLOHeadroom(slo, cfg.window, cfg.target_attainment,
                            cfg.headroom)
@@ -297,6 +365,23 @@ def make_scaling(cfg: AutoscaleConfig, slo: float) -> ScalingPolicy:
         return Scripted(cfg.script)
     raise ValueError(f"unknown scaling policy {cfg.policy!r}; "
                      f"choose from {sorted(SCALINGS)}")
+
+
+def coordinator_forecast(autoscale: Optional[AutoscaleConfig],
+                         explicit: Optional[ForecastConfig]
+                         ) -> Optional[ForecastConfig]:
+    """THE defaulting rule for the coordinator-level ForecastConfig,
+    stated once so both transports construct identical forecasters (a
+    transport-local default would silently break schedule parity): an
+    explicit config wins; otherwise a forecast-led scaling policy gets
+    a default forecaster windowed at its own ``rate_window`` (forecast
+    and reactive fallback then read comparable rates); otherwise no
+    coordinator forecaster at all."""
+    if explicit is not None:
+        return explicit
+    if autoscale is not None and autoscale.policy == "predictive":
+        return ForecastConfig(window=autoscale.rate_window)
+    return None
 
 
 # --------------------------------------------------------------------------

@@ -38,6 +38,7 @@ from repro.serving.engine import (EV_ARRIVAL, EV_FAULT, EV_FREE, EV_LAUNCH,
                                   CompletionRecord, Dispatch, EngineConfig,
                                   SchedulingEngine, VirtualClock,
                                   completion_records)
+from repro.serving.forecast import ArrivalForecaster, ForecastConfig
 from repro.serving.metrics import cluster_summarize
 from repro.serving.policies import Policy
 from repro.serving.profiler import LatencyProfile
@@ -218,7 +219,8 @@ class ClusterCoordinator:
     *within* a replica stays in that replica's engine."""
 
     def __init__(self, engines: Sequence[SchedulingEngine],
-                 placement: PlacementPolicy, placement_seed: int = 0):
+                 placement: PlacementPolicy, placement_seed: int = 0,
+                 forecast: Optional[ForecastConfig] = None):
         if not engines:
             raise ValueError("a cluster needs at least one replica")
         self.engines = list(engines)
@@ -229,6 +231,12 @@ class ClusterCoordinator:
         self.placement = placement
         placement.reset(len(self.engines), seed=placement_seed)
         self.queries: List[Query] = []      # master admission list
+        # cluster-level arrival forecaster (serving/forecast.py): fed
+        # once per cluster admission, consumed by forecast-led scaling
+        # policies and surfaced through forecast_snapshot — forecasting
+        # state lives in the forecaster only, transports never mutate it
+        self.forecaster: Optional[ArrivalForecaster] = (
+            ArrivalForecaster(forecast) if forecast is not None else None)
 
     # -- liveness / views ----------------------------------------------
 
@@ -274,12 +282,21 @@ class ClusterCoordinator:
         self.engines[rid].admit(q)          # stamps q.replica = rid
         return rid
 
+    def observe(self, q: Query) -> None:
+        """Feed the cluster-level forecaster one admission. Split from
+        ``admit`` because the asyncio front door appends to the master
+        list itself (its admission goes through the chosen replica's
+        lock) — both paths must observe exactly once per arrival."""
+        if self.forecaster is not None:
+            self.forecaster.observe(q.arrival)
+
     def admit(self, q: Query, now: float) -> Optional[int]:
         """Cluster front door: record the query once and route it.
         With no routable replica (every one dead, or the survivors all
         still warming) there is nowhere to route — the query is dropped
         (recorded, never served) and None returned."""
         self.queries.append(q)
+        self.observe(q)
         if not self.alive_replicas():
             q.dropped = True
             return None
@@ -319,6 +336,18 @@ class ClusterCoordinator:
                 q.dropped = True
             return []
         return [(q, self.route(q, now)) for q in orphans]
+
+    # -- forecast introspection -----------------------------------------
+
+    def forecast_snapshot(self, now: float
+                          ) -> Optional[Dict[str, Optional[float]]]:
+        """Read-only forecast bundle (rate / trend / ETA / CV^2 / burst
+        flag) at ``now``; None when no forecaster is configured. Both
+        transports surface this (ClusterResult.forecast,
+        ClusterRouter.stats) — reading it never perturbs the state."""
+        if self.forecaster is None:
+            return None
+        return self.forecaster.snapshot(now)
 
     # -- accounting ----------------------------------------------------
 

@@ -26,6 +26,7 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
+from repro.serving.forecast import ArrivalForecaster, ForecastConfig
 from repro.serving.metrics import summarize
 from repro.serving.policies import Policy
 from repro.serving.profiler import (RTX2080TI, SUBNETACT_ACTUATION_S,
@@ -73,6 +74,20 @@ class EngineConfig:
     drop_infeasible: bool = True
     continuous_batching: bool = False
     max_join_window: float = 0.25       # hard cap (s) on batch-forming time
+    # predictive join windows (ROADMAP "joins at saturation"): hold a
+    # forming batch open — even on the pool's LAST free worker — when
+    # the engine's arrival forecaster says a joinable arrival lands
+    # within the batch's slack budget. Implies in-flight joins; with
+    # predictive_joins=False the spare-capacity-only PR 2 gate is the
+    # whole rule (pinned in tests/test_engine.py).
+    predictive_joins: bool = False
+    join_eta_factor: float = 2.0        # window = eta_factor * forecast ETA
+    # overload guard: no predictive window within this many forecast
+    # windows of an infeasible-drop (drops = the engine's own overload
+    # signal; holding the last worker while shedding load turns every
+    # held capacity-second into misses behind it)
+    drop_guard: float = 1.0
+    forecast: Optional[ForecastConfig] = None   # None -> defaults
 
 
 @dataclass
@@ -107,6 +122,12 @@ class DispatchRecord:
     latency: float
     queue_len: int
     replica: int = 0
+    # continuous-batching introspection: members admitted after batch
+    # formation, and the earliest member deadline the launch was checked
+    # against — the deadline-soundness property (tests/test_engine.py)
+    # asserts t + latency <= batch_deadline whenever joined > 0
+    joined: int = 0
+    batch_deadline: float = float("inf")
 
 
 @dataclass(frozen=True)
@@ -153,6 +174,16 @@ class SchedulingEngine:
         self.dispatches: List[DispatchRecord] = []
         self.n_joins = 0                        # queries joined in flight
         self.n_open_batches = 0                 # batches that opened a window
+        self.n_predictive_windows = 0           # opened with no spare worker
+        # in-flight joins are live if either flavor is on; the engine's
+        # own forecaster exists only for predictive windows (fed at
+        # admission — transports never touch it)
+        self._batching = bool(self.cfg.continuous_batching
+                              or self.cfg.predictive_joins)
+        self.forecaster: Optional[ArrivalForecaster] = (
+            ArrivalForecaster(self.cfg.forecast)
+            if self.cfg.predictive_joins else None)
+        self._last_drop_t = float("-inf")   # predictive-window overload gate
 
     # -- admission -----------------------------------------------------
 
@@ -160,6 +191,8 @@ class SchedulingEngine:
         q.replica = self.replica_id
         self.queries.append(q)
         self.edf.push(q)
+        if self.forecaster is not None:
+            self.forecaster.observe(q.arrival)
 
     def drop_expired(self, now: float) -> List[Query]:
         """Drop queries that cannot meet their deadline even at the
@@ -167,6 +200,8 @@ class SchedulingEngine:
         if not self.cfg.drop_infeasible:
             return []
         dropped = self.edf.drop_expired(now, self.min_service)
+        if dropped:
+            self._last_drop_t = now
         if self.on_drop is not None:
             for q in dropped:
                 self.on_drop(q)
@@ -190,24 +225,45 @@ class SchedulingEngine:
         d = Dispatch(wid=wid, queries=batch, pareto_idx=dec.pareto_idx,
                      batch_deadline=min(q.deadline for q in batch))
         self.inflight[wid] = d
-        # Open a join window only with spare capacity: holding the pool's
-        # last free worker would delay the very queries a window is meant
-        # to batch — with no spare, serve immediately (decision-time).
-        if (self.cfg.continuous_batching and not len(self.edf)
-                and len(batch) < self.profile.batches[-1]
-                and len(self.worker_model) > len(self.inflight)):
-            # Size the window for the batch's *next realizable size at
+        # Open a join window with spare capacity (the PR 2 rule: holding
+        # the pool's LAST free worker would delay the very queries a
+        # window is meant to batch) — or, with predictive joins, even on
+        # the last worker when the forecast says a joinable arrival
+        # lands within the slack budget (the saturation case where
+        # spare-capacity-only joins stall: waiting one forecast ETA
+        # grows the batch instead of burning a dispatch on it).
+        if (self._batching and not len(self.edf)
+                and len(batch) < self.profile.batches[-1]):
+            # Size the budget for the batch's *next realizable size at
             # its current subnet*: waiting longer than (slack − that
             # grown batch's service time) would endanger the deadline.
             est = self._service_estimate(wid, d.pareto_idx,
                                          self._next_batch(len(batch)))
-            window = min(d.batch_deadline - now - est,
+            budget = min(d.batch_deadline - now - est,
                          dec.join_window, self.cfg.max_join_window)
+            window, predicted = 0.0, False
+            if len(self.worker_model) > len(self.inflight):
+                window = budget
+            elif (self.forecaster is not None
+                    # never hold the last worker while shedding load: a
+                    # recent infeasible-drop means the pool is in
+                    # overload, where every held capacity-second turns
+                    # into deadline misses behind it (the deep-overload
+                    # regression guard, see tests/test_engine.py)
+                    and now - self._last_drop_t
+                    >= self.cfg.drop_guard * self.forecaster.cfg.window):
+                eta = self.forecaster.eta(now)
+                if (self.forecaster.has_signal(now) and eta is not None
+                        and eta <= budget):
+                    window = min(self.cfg.join_eta_factor * eta, budget)
+                    predicted = True
             if window > 1e-9:
                 d.open = True
                 d.launch_at = now + window
                 self.open_batches[wid] = d
                 self.n_open_batches += 1
+                if predicted:
+                    self.n_predictive_windows += 1
         return d
 
     def _next_batch(self, size: int) -> int:
@@ -223,7 +279,7 @@ class SchedulingEngine:
         batch up the Pareto frontier) and is accepted only if the batch
         still meets its earliest deadline at launch. Returns batches
         that filled up (or turned urgent) and must launch *now*."""
-        if not self.cfg.continuous_batching or not self.open_batches:
+        if not self._batching or not self.open_batches:
             return []
         ready: List[Dispatch] = []
         max_b = self.profile.batches[-1]
@@ -321,7 +377,9 @@ class SchedulingEngine:
         self.open_batches.pop(d.wid, None)
         self.dispatches.append(DispatchRecord(now, d.wid, eff_b, d.pareto_idx,
                                               d.acc, lat, len(self.edf),
-                                              replica=self.replica_id))
+                                              replica=self.replica_id,
+                                              joined=d.joined,
+                                              batch_deadline=d.batch_deadline))
         return d
 
     def complete(self, d: Dispatch, finish: float) -> List[Query]:

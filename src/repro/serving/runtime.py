@@ -28,9 +28,11 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.serving.autoscaler import AutoscaleConfig, ClusterAutoscaler
+from repro.serving.autoscaler import (AutoscaleConfig, ClusterAutoscaler,
+                                      coordinator_forecast)
 from repro.serving.cluster import (ClusterCoordinator, drive_cluster,
                                    make_placement)
+from repro.serving.forecast import ForecastConfig
 from repro.serving.engine import (CompletionRecord, Dispatch, EngineConfig,
                                   SchedulingEngine, VirtualClock, WallClock,
                                   drive)
@@ -333,7 +335,8 @@ class ClusterRouter:
                  autoscale: Optional[AutoscaleConfig] = None,
                  worker_factory: Optional[Callable[[int],
                                           List[WorkerHandle]]] = None,
-                 slo: float = 0.036):
+                 slo: float = 0.036,
+                 forecast: Optional[ForecastConfig] = None):
         # ``slo`` is the deadline regime the autoscaler's thresholds
         # normalize to (when AutoscaleConfig.slo is None) — match the
         # slo_s you submit/run_virtual with, as simulate_cluster's
@@ -346,9 +349,13 @@ class ClusterRouter:
             Router(profile, policy.clone(), group, clock=self.clock,
                    engine_cfg=engine_cfg, replica_id=rid)
             for rid, group in enumerate(replicas)]
+        # the coordinator-level forecaster must be constructed by the
+        # SAME defaulting rule as simulate_cluster (coordinator_forecast)
+        # or forecast-led schedules would diverge between transports
         self.coord = ClusterCoordinator(
             [r.engine for r in self.routers], make_placement(placement),
-            placement_seed=placement_seed)
+            placement_seed=placement_seed,
+            forecast=coordinator_forecast(autoscale, forecast))
         self._qid = 0
         self._started = False
         self._scale_task: Optional[asyncio.Task] = None
@@ -435,6 +442,7 @@ class ClusterRouter:
         q = Query(deadline=now + slo_s, seq=0, arrival=now, qid=self._qid)
         self._qid += 1
         self.coord.queries.append(q)
+        self.coord.observe(q)           # one forecast observation per arrival
         if not self.coord.alive_replicas():
             # coordinator semantics (cluster.py admit): nowhere to
             # route — record the query and resolve it as dropped
@@ -536,12 +544,17 @@ class ClusterRouter:
 
     def stats(self) -> Dict[str, float]:
         if self.autoscaler is not None:
-            return cluster_summarize(
+            st = cluster_summarize(
                 self.coord.queries, n_replicas=self.coord.n_replicas,
                 n_joins=sum(e.n_joins for e in self.coord.engines),
                 replica_spans=self.autoscaler.replica_spans(
                     self.clock.now()))
-        return self.coord.stats()
+        else:
+            st = self.coord.stats()
+        snap = self.coord.forecast_snapshot(self.clock.now())
+        if snap is not None:
+            st["forecast"] = snap
+        return st
 
     def records(self) -> List[CompletionRecord]:
         return self.coord.records()

@@ -24,7 +24,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.serving.autoscaler import (AutoscaleConfig, ClusterAutoscaler,
-                                      ScaleEvent)
+                                      ScaleEvent, coordinator_forecast)
+from repro.serving.forecast import ForecastConfig
 from repro.serving.cluster import (ClusterCoordinator, build_engines,
                                    drive_cluster, make_placement,
                                    replica_worker_counts)
@@ -55,6 +56,8 @@ class SimConfig:
     drop_infeasible: bool = True
     continuous_batching: bool = False       # in-flight joins (paper §5)
     max_join_window: float = 0.25           # cap (s) on batch-forming time
+    predictive_joins: bool = False          # forecast-led windows at saturation
+    forecast: Optional[ForecastConfig] = None   # None -> defaults
     seed: int = 0
 
     def engine_config(self) -> EngineConfig:
@@ -62,7 +65,9 @@ class SimConfig:
                             load_on_switch=self.load_on_switch, hw=self.hw,
                             drop_infeasible=self.drop_infeasible,
                             continuous_batching=self.continuous_batching,
-                            max_join_window=self.max_join_window)
+                            max_join_window=self.max_join_window,
+                            predictive_joins=self.predictive_joins,
+                            forecast=self.forecast)
 
 
 @dataclass
@@ -72,6 +77,7 @@ class SimResult:
     duration: float
     n_joins: int = 0                        # queries joined in flight
     n_open_batches: int = 0                 # batches that opened a window
+    n_predictive_windows: int = 0           # opened with no spare worker
 
     @property
     def slo_attainment(self) -> float:
@@ -145,7 +151,8 @@ def simulate(arrivals: Sequence[float], profile: LatencyProfile,
 
     return SimResult(queries=queries, dispatches=engine.dispatches,
                      duration=duration, n_joins=engine.n_joins,
-                     n_open_batches=engine.n_open_batches)
+                     n_open_batches=engine.n_open_batches,
+                     n_predictive_windows=engine.n_predictive_windows)
 
 
 # --------------------------------------------------------------------------
@@ -171,6 +178,12 @@ class ClusterConfig:
     drop_infeasible: bool = True
     continuous_batching: bool = False
     max_join_window: float = 0.25
+    predictive_joins: bool = False          # forecast-led windows at saturation
+    # shared ForecastConfig: engine-level (predictive joins) AND
+    # coordinator-level (predictive scaling / introspection). None ->
+    # engine defaults; the coordinator forecaster then exists only when
+    # the scaling policy is forecast-led (coordinator_forecast rule)
+    forecast: Optional[ForecastConfig] = None
     # fault injection: whole replicas and/or single workers
     replica_deaths: Dict[int, float] = field(default_factory=dict)
     fault_times: Dict[Tuple[int, int], float] = field(default_factory=dict)
@@ -184,7 +197,9 @@ class ClusterConfig:
                             load_on_switch=self.load_on_switch, hw=self.hw,
                             drop_infeasible=self.drop_infeasible,
                             continuous_batching=self.continuous_batching,
-                            max_join_window=self.max_join_window)
+                            max_join_window=self.max_join_window,
+                            predictive_joins=self.predictive_joins,
+                            forecast=self.forecast)
 
 
 @dataclass
@@ -194,10 +209,14 @@ class ClusterResult:
     duration: float
     n_replicas: int                         # replicas that ever existed
     n_joins: int = 0
+    n_predictive_windows: int = 0           # windows opened with no spare
     # autoscaling accounting: per-replica active seconds (static runs
     # bill every replica for the whole duration) + the scale-event log
     replica_spans: Dict[int, float] = field(default_factory=dict)
     scale_events: List[ScaleEvent] = field(default_factory=list)
+    # coordinator forecast snapshot at the end of the run (None when no
+    # coordinator forecaster was configured)
+    forecast: Optional[Dict[str, float]] = None
 
     @property
     def replica_seconds(self) -> float:
@@ -254,7 +273,9 @@ def simulate_cluster(arrivals: Sequence[float], profile: LatencyProfile,
     engines = build_engines(profile, policy, ccfg.n_replicas, counts,
                             ccfg.engine_config())
     coord = ClusterCoordinator(engines, make_placement(ccfg.placement),
-                               placement_seed=ccfg.placement_seed)
+                               placement_seed=ccfg.placement_seed,
+                               forecast=coordinator_forecast(ccfg.autoscale,
+                                                             ccfg.forecast))
 
     autoscaler = None
     if ccfg.autoscale is not None:
@@ -299,4 +320,7 @@ def simulate_cluster(arrivals: Sequence[float], profile: LatencyProfile,
     return ClusterResult(queries=coord.queries, dispatches=dispatches,
                          duration=duration, n_replicas=coord.n_replicas,
                          n_joins=sum(e.n_joins for e in coord.engines),
-                         replica_spans=spans, scale_events=scale_events)
+                         n_predictive_windows=sum(e.n_predictive_windows
+                                                  for e in coord.engines),
+                         replica_spans=spans, scale_events=scale_events,
+                         forecast=coord.forecast_snapshot(duration))

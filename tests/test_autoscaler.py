@@ -22,9 +22,12 @@ from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.serving import cluster, policies, profiler, simulator, traces
-from repro.serving.autoscaler import (AutoscaleConfig, ClusterAutoscaler,
-                                      QueuePressure, Scripted, make_scaling)
+from repro.serving.autoscaler import (SCALINGS, AutoscaleConfig,
+                                      ClusterAutoscaler, Predictive,
+                                      QueuePressure, Scripted,
+                                      coordinator_forecast, make_scaling)
 from repro.serving.engine import SchedulingEngine
+from repro.serving.forecast import ForecastConfig
 from repro.serving.queue import Query
 
 PROF = profiler.build_profile(get_config("ofa_resnet"))
@@ -292,6 +295,105 @@ class TestReactivePolicies:
         pol.epoch = 100.0               # wall-clock style origin
         assert pol.decide(None, [(0, None)], 100.4)[0] == 0
         assert pol.decide(None, [(0, None)], 100.6)[0] == 1
+
+
+class TestPredictiveScaling:
+    """The forecast-led policy (ISSUE 5): spawns ride the forecast,
+    the reactive queue_pressure floor is preserved byte-identically
+    when the forecaster never fires."""
+
+    def test_predictive_registered_and_horizon_defaults(self):
+        assert "predictive" in SCALINGS
+        pol = make_scaling(AutoscaleConfig(policy="predictive",
+                                           cold_start=0.2, interval=0.05),
+                           slo=0.036)
+        assert isinstance(pol, Predictive)
+        assert isinstance(pol, QueuePressure)   # the reactive fallback IS it
+        assert pol.horizon == pytest.approx(0.25)
+        explicit = make_scaling(AutoscaleConfig(policy="predictive",
+                                                horizon=0.4), slo=0.036)
+        assert explicit.horizon == pytest.approx(0.4)
+        with pytest.raises(ValueError):
+            AutoscaleConfig(horizon=-1.0).validate()
+
+    def test_coordinator_forecast_defaulting_rule(self):
+        """Both transports construct the coordinator forecaster through
+        this one rule — explicit config wins, predictive policy gets a
+        rate_window-matched default, anything else gets none."""
+        explicit = ForecastConfig(window=0.7)
+        assert coordinator_forecast(None, explicit) is explicit
+        assert coordinator_forecast(
+            AutoscaleConfig(policy="queue_pressure"), None) is None
+        fc = coordinator_forecast(
+            AutoscaleConfig(policy="predictive", rate_window=0.4), None)
+        assert fc is not None and fc.window == pytest.approx(0.4)
+
+    def test_never_firing_forecaster_replays_reactive_schedule(self):
+        """THE fallback invariant: a coordinator forecaster that can
+        never reach signal makes `predictive` replay the queue_pressure
+        schedule byte-identically — records, dispatches, AND the scale
+        event timeline with its signal values."""
+        def acfg(policy):
+            return AutoscaleConfig(min_replicas=1, max_replicas=6,
+                                   policy=policy, cooldown=0.2)
+        base = _sim(ARR, 2, acfg("queue_pressure"))
+        mute = _sim(ARR, 2, acfg("predictive"),
+                    forecast=ForecastConfig(min_arrivals=10**9))
+        assert mute.records == base.records
+        assert [(d.t, d.replica, d.worker, d.batch, d.pareto_idx)
+                for d in mute.dispatches] == \
+               [(d.t, d.replica, d.worker, d.batch, d.pareto_idx)
+                for d in base.dispatches]
+        assert [(e.t, e.kind, e.rid, e.signal) for e in mute.scale_events] \
+            == [(e.t, e.kind, e.rid, e.signal) for e in base.scale_events]
+        # non-vacuous: the reactive baseline really scaled here
+        assert any(e.kind == "spawn" for e in base.scale_events)
+        # and the muted forecaster really observed yet never fired
+        assert mute.forecast is not None
+        assert mute.forecast["n_observed"] == len(ARR)
+        assert mute.forecast["has_signal"] == 0.0
+
+    def test_predictive_spawns_ahead_on_a_forecastable_ramp(self):
+        """On a smooth accelerating ramp the forecast crosses capacity
+        before the observed rate does: predictive's first spawn lands
+        earlier than reactive's, and attainment doesn't suffer. The
+        thresholds are set so the *utilization* signal is the binding
+        one for both policies (a twitchy backlog kicker would fire
+        first on transient queue spikes and mask the forecast lead)."""
+        ramp = traces.time_varying_trace(100, 4000, 500, 1.0, 6.0, seed=5)
+
+        def acfg(policy):
+            return AutoscaleConfig(min_replicas=1, max_replicas=8,
+                                   policy=policy, cold_start=0.25,
+                                   util_target=0.3, up_pressure=4.0)
+        reactive = _sim(ramp, 1, acfg("queue_pressure"))
+        predictive = _sim(ramp, 1, acfg("predictive"))
+        t_r = min(e.t for e in reactive.scale_events if e.kind == "spawn")
+        t_p = min(e.t for e in predictive.scale_events if e.kind == "spawn")
+        assert t_p < t_r
+        assert predictive.slo_attainment >= reactive.slo_attainment
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_conservation_with_predictive_scaling_and_joins(self, seed):
+        """The PR 4 conservation property extended: forecast-led
+        scaling racing predictive join windows still resolves every
+        query exactly once."""
+        rng = np.random.default_rng(seed)
+        arr = np.sort(rng.uniform(0, 0.6, size=int(rng.integers(20, 300))))
+        res = _sim(arr, 1,
+                   AutoscaleConfig(min_replicas=1, max_replicas=4,
+                                   policy="predictive", cooldown=0.1),
+                   continuous_batching=True, predictive_joins=True)
+        served = sum(1 for q in res.queries
+                     if q.finish is not None and not q.dropped)
+        dropped = sum(1 for q in res.queries if q.dropped)
+        assert served + dropped == len(arr)
+        qids = [r.qid for r in res.records]
+        assert qids == sorted(set(qids)) and len(qids) == len(arr)
+        for e in res.scale_events:
+            if e.kind in ("spawn", "ready", "decommission"):
+                assert 1 <= e.n_committed <= 4
 
 
 class TestReplicaSecondsAccounting:

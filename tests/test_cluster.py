@@ -11,6 +11,7 @@ from repro.configs import get_config
 from repro.serving import cluster, policies, profiler, simulator, traces
 from repro.serving.autoscaler import AutoscaleConfig
 from repro.serving.engine import EngineConfig, SchedulingEngine, VirtualClock
+from repro.serving.forecast import ForecastConfig
 from repro.serving.queue import Query
 from repro.serving.runtime import ClusterRouter, WorkerHandle
 
@@ -159,6 +160,89 @@ class TestAutoscaledParity:
         router = _virtual_cluster(2, 2, "round_robin", continuous=True,
                                   autoscale=acfg())
         assert router.run_virtual(ARR, slo_s=0.036) == sim.records
+
+
+class TestPredictiveParity:
+    """ISSUE 5 acceptance: with the shared forecaster driving BOTH
+    predictive scaling and predictive join windows, ClusterRouter and
+    simulate_cluster still produce record-for-record identical
+    schedules, identical scale-event timelines, and byte-identical
+    forecast snapshots — forecasting state lives in the coordinator /
+    engine layer, transports stay thin over it."""
+
+    @pytest.mark.parametrize("placement", sorted(cluster.PLACEMENTS))
+    def test_parity_with_predictive_scaling_and_joins(self, placement):
+        def acfg():
+            return AutoscaleConfig(min_replicas=1, max_replicas=6,
+                                   policy="predictive", cooldown=0.2)
+        ccfg = simulator.ClusterConfig(
+            n_replicas=2, workers_per_replica=2, placement=placement,
+            slo=0.036, continuous_batching=True, predictive_joins=True,
+            autoscale=acfg())
+        sim = simulator.simulate_cluster(ARR, PROF, policies.SlackFit(),
+                                         ccfg)
+        router = ClusterRouter(
+            PROF, policies.SlackFit(), _groups(2, 2), clock=VirtualClock(),
+            placement=placement,
+            engine_cfg=EngineConfig(continuous_batching=True,
+                                    predictive_joins=True),
+            autoscale=acfg())
+        recs = router.run_virtual(ARR, slo_s=0.036)
+        assert recs == sim.records
+        assert [(e.t, e.kind, e.rid) for e in sim.scale_events] == \
+               [(e.t, e.kind, e.rid) for e in router.autoscaler.events]
+        # the coordinator forecasters observed identical streams
+        assert router.coord.forecast_snapshot(sim.duration) == sim.forecast
+        assert sim.forecast is not None
+        assert sim.forecast["n_observed"] == len(ARR)
+        # non-vacuous: scaling actually happened with forecasting on
+        assert any(e.kind == "spawn" for e in sim.scale_events)
+
+    def test_parity_with_predictive_joins_only(self):
+        """Predictive windows without autoscaling: per-engine
+        forecasters exist on both transports and the schedules (incl.
+        the predictive-window counts) stay identical."""
+        ccfg = simulator.ClusterConfig(
+            n_replicas=2, workers_per_replica=1, placement="round_robin",
+            slo=0.05, continuous_batching=True, predictive_joins=True)
+        sim = simulator.simulate_cluster(ARR, PROF, policies.SlackFit(),
+                                         ccfg)
+        router = ClusterRouter(
+            PROF, policies.SlackFit(), _groups(2, 1), clock=VirtualClock(),
+            placement="round_robin",
+            engine_cfg=EngineConfig(continuous_batching=True,
+                                    predictive_joins=True))
+        assert router.run_virtual(ARR, slo_s=0.05) == sim.records
+        assert sum(e.n_predictive_windows for e in router.coord.engines) \
+            == sim.n_predictive_windows
+        # 1-worker pools: every window is a predictive (no-spare) one
+        assert sim.n_predictive_windows == sum(
+            e.n_open_batches for e in router.coord.engines)
+        assert sim.n_predictive_windows > 0
+
+    def test_explicit_forecast_config_surfaces_without_autoscale(self):
+        """ClusterConfig.forecast alone turns on coordinator forecast
+        introspection, identically on both transports."""
+        fcfg = ForecastConfig(window=0.5)
+        ccfg = simulator.ClusterConfig(
+            n_replicas=2, workers_per_replica=2, placement="round_robin",
+            slo=0.036, forecast=fcfg)
+        sim = simulator.simulate_cluster(ARR, PROF, policies.SlackFit(),
+                                         ccfg)
+        assert sim.forecast is not None
+        assert sim.forecast["n_observed"] == len(ARR)
+        router = ClusterRouter(
+            PROF, policies.SlackFit(), _groups(2, 2), clock=VirtualClock(),
+            placement="round_robin", forecast=fcfg)
+        router.run_virtual(ARR, slo_s=0.036)
+        assert "forecast" in router.stats()
+        assert router.coord.forecast_snapshot(sim.duration) == sim.forecast
+        # no coordinator forecaster -> no snapshot key
+        plain = ClusterRouter(
+            PROF, policies.SlackFit(), _groups(2, 2), clock=VirtualClock(),
+            placement="round_robin")
+        plain.run_virtual(ARR, slo_s=0.036)
+        assert "forecast" not in plain.stats()
 
 
 class TestSingleReplicaUnchanged:
@@ -469,6 +553,36 @@ class TestClusterRouterAsync:
         # the spawned replica actually served between ready and decom
         assert {q.replica for q in cr.coord.queries} == {0, 1}
         assert st["replica_seconds"] > 0
+
+    def test_live_predictive_autoscale_feeds_forecaster(self):
+        """The live asyncio plane: every submission feeds the
+        coordinator forecaster exactly once (the front door bypasses
+        coord.admit, so it must call coord.observe itself), and the
+        wall-clock autoscale loop consults the predictive policy
+        without error."""
+        async def main():
+            cr = ClusterRouter(
+                PROF, policies.SlackFit(), _groups(1, 2),
+                placement="round_robin",
+                autoscale=AutoscaleConfig(
+                    min_replicas=1, max_replicas=2, interval=0.02,
+                    cold_start=0.02, policy="predictive"))
+            await cr.start()
+            futs = []
+            for _ in range(40):
+                futs.append(await cr.submit(np.ones(4), slo_s=2.0))
+                await asyncio.sleep(0.003)
+            results = await asyncio.gather(*futs)
+            await cr.drain()
+            return cr, results
+
+        cr, results = asyncio.run(main())
+        st = cr.stats()
+        assert st["served"] == 40
+        assert all(p is not None for p, _ in results)
+        assert cr.coord.forecaster is not None
+        assert st["forecast"]["n_observed"] == 40.0
+        assert st["forecast"]["rate"] >= 0.0
 
     def test_submit_after_total_death_resolves_as_dropped(self):
         """Coordinator semantics under total cluster failure: the query

@@ -1,21 +1,27 @@
 """Shared scheduling engine: router/simulator parity through the one
-core, continuous-batching join semantics, and EDF queue edge cases."""
+core, continuous-batching join semantics (spare-capacity and
+predictive-forecast windows), and EDF queue edge cases."""
 import numpy as np
+
+from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.serving import policies, profiler, simulator, traces
 from repro.serving.engine import EngineConfig, VirtualClock
+from repro.serving.forecast import ForecastConfig
 from repro.serving.queue import EDFQueue, Query
 from repro.serving.runtime import Router, WorkerHandle
 
 PROF = profiler.build_profile(get_config("ofa_resnet"))
 
 
-def _virtual_router(n_workers: int, continuous: bool = False) -> Router:
+def _virtual_router(n_workers: int, continuous: bool = False,
+                    engine_cfg: EngineConfig = None) -> Router:
     workers = [WorkerHandle(wid=i, run=lambda idx, p: np.zeros(len(p)))
                for i in range(n_workers)]
     return Router(PROF, policies.SlackFit(), workers, clock=VirtualClock(),
-                  engine_cfg=EngineConfig(continuous_batching=continuous))
+                  engine_cfg=engine_cfg
+                  or EngineConfig(continuous_batching=continuous))
 
 
 class TestParity:
@@ -109,6 +115,100 @@ class TestContinuousBatching:
         # tight slack leaves no room to hold the batch open
         tight = policies.SlackFit().choose(PROF, float(PROF.lat.min()), 1)
         assert tight.join_window <= 1e-9 + float(PROF.lat.min())
+
+
+class TestPredictiveJoins:
+    """Forecast-led join windows at saturation (ROADMAP "joins at
+    saturation"): with predictive_joins=False the PR 2 spare-capacity
+    gate is pinned as the baseline; with it on, a forecast that a
+    joinable arrival lands within slack may hold even the pool's last
+    free worker — but never past any member's deadline."""
+
+    REGULAR = np.arange(0.0, 2.0, 0.004)    # steady 250 q/s
+
+    def test_baseline_pinned_saturated_pool_never_opens(self):
+        """predictive_joins=False (the default): a single-worker pool
+        is the saturation case — spare-capacity-only joins stall, no
+        window ever opens. This is the behavior predictive joins exist
+        to fix, pinned so the flag's OFF state stays byte-stable."""
+        scfg = simulator.SimConfig(n_workers=1, slo=0.1,
+                                   continuous_batching=True,
+                                   predictive_joins=False)
+        res = simulator.simulate(self.REGULAR, PROF, policies.SlackFit(),
+                                 scfg)
+        assert res.n_open_batches == 0 and res.n_joins == 0
+        assert res.n_predictive_windows == 0
+
+    def test_predictive_opens_and_joins_at_saturation(self):
+        """Same saturated pool, forecaster on: the regular stream is
+        trivially forecastable, so windows open on the last worker and
+        arrivals join in flight."""
+        scfg = simulator.SimConfig(n_workers=1, slo=0.1,
+                                   continuous_batching=True,
+                                   predictive_joins=True)
+        res = simulator.simulate(self.REGULAR, PROF, policies.SlackFit(),
+                                 scfg)
+        assert res.n_predictive_windows > 0
+        assert res.n_joins > 0
+        assert res.slo_attainment == 1.0
+        # joined batches really merged: some dispatch carries > 1 query
+        assert any(d.joined > 0 and d.batch > 1 for d in res.dispatches)
+
+    def test_never_firing_forecaster_replays_spare_only_schedule(self):
+        """A forecaster that can never reach signal (min_arrivals past
+        the trace length) replays the spare-capacity-only continuous-
+        batching schedule byte-identically — the predictive layer is
+        pure addition."""
+        arr = traces.bursty_trace(400, 1600, 4, 2.0, seed=23)
+        base = simulator.simulate(
+            arr, PROF, policies.SlackFit(),
+            simulator.SimConfig(n_workers=3, slo=0.036,
+                                continuous_batching=True))
+        idle = simulator.simulate(
+            arr, PROF, policies.SlackFit(),
+            simulator.SimConfig(n_workers=3, slo=0.036,
+                                continuous_batching=True,
+                                predictive_joins=True,
+                                forecast=ForecastConfig(
+                                    min_arrivals=10**9)))
+        assert idle.records == base.records
+        assert idle.n_predictive_windows == 0
+        assert [(d.t, d.worker, d.batch, d.pareto_idx, d.joined)
+                for d in idle.dispatches] == \
+               [(d.t, d.worker, d.batch, d.pareto_idx, d.joined)
+                for d in base.dispatches]
+
+    def test_router_simulator_parity_with_predictive_joins(self):
+        """Both transports drive the same engine: predictive windows
+        must not break record-for-record parity."""
+        arr = traces.bursty_trace(400, 1600, 4, 2.0, seed=23)
+        cfg = simulator.SimConfig(n_workers=2, slo=0.05,
+                                  continuous_batching=True,
+                                  predictive_joins=True)
+        sim = simulator.simulate(arr, PROF, policies.SlackFit(), cfg)
+        router = _virtual_router(2, engine_cfg=cfg.engine_config())
+        recs = router.run_virtual(arr, slo_s=0.05)
+        assert recs == sim.records
+        assert router.engine.n_joins == sim.n_joins
+        assert router.engine.n_predictive_windows == sim.n_predictive_windows
+
+    @given(st.integers(0, 10_000), st.floats(0.03, 0.12),
+           st.integers(1, 3))
+    @settings(max_examples=60, deadline=None)
+    def test_joins_never_admit_past_deadline(self, seed, slo, n_workers):
+        """THE deadline-soundness property: whatever the arrival
+        process, a batch that admitted in-flight joins still launches
+        within its earliest member deadline (so no member is served
+        late *because of* a join)."""
+        rng = np.random.default_rng(seed)
+        arr = np.sort(rng.uniform(0, 0.5, size=int(rng.integers(10, 250))))
+        scfg = simulator.SimConfig(n_workers=n_workers, slo=slo,
+                                   continuous_batching=True,
+                                   predictive_joins=True)
+        res = simulator.simulate(arr, PROF, policies.SlackFit(), scfg)
+        for d in res.dispatches:
+            if d.joined > 0:
+                assert d.t + d.latency <= d.batch_deadline + 1e-9
 
 
 class TestEDFQueueEdges:

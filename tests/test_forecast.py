@@ -1,0 +1,269 @@
+"""Arrival-forecaster property suite (hypothesis) + units.
+
+The contracts every forecaster consumer (the ``predictive`` scaling
+policy, the engine's predictive join windows) relies on:
+
+  * forecasts are non-negative and finite for ARBITRARY arrival
+    sequences, query times, and horizons;
+  * a constant-rate stream converges to the true rate within the
+    sliding window's quantization tolerance;
+  * a step change is fully absorbed within two window lengths;
+  * the estimator is deterministic under replay (same arrivals ->
+    byte-identical forecast series) and query-pure (reading the
+    forecast never perturbs what a later read returns — so *when* a
+    transport happens to ask cannot break transport parity);
+  * an idle stream decays to exactly zero within one window.
+"""
+import math
+
+import pytest
+
+from tests._hypothesis_compat import given, settings, strategies as st
+
+from repro.serving.forecast import ArrivalForecaster, ForecastConfig
+
+W = 0.25
+CFG = ForecastConfig(window=W)
+
+# arbitrary (sorted) arrival sequences: bursts via tiny gaps, lulls via
+# window-sized ones
+GAPS = st.lists(st.floats(0.0, 2.0 * W), min_size=1, max_size=80)
+
+
+def _arrivals(gaps):
+    t, out = 0.0, []
+    for g in gaps:
+        t += g
+        out.append(t)
+    return out
+
+
+def _series(fc, queries):
+    """The forecast read-surface at each (now, horizon) pair."""
+    return [(fc.rate(now), fc.trend(now), fc.forecast(now, h),
+             fc.eta(now), fc.cv2(now), fc.has_signal(now))
+            for now, h in queries]
+
+
+class TestForecastProperties:
+    @given(GAPS, st.floats(0.0, 1.0), st.floats(0.0, 2.0))
+    @settings(max_examples=100, deadline=None)
+    def test_non_negative_and_finite(self, gaps, dt_after, horizon):
+        fc = ArrivalForecaster(CFG)
+        arrivals = _arrivals(gaps)
+        for t in arrivals:
+            fc.observe(t)
+        for now in [*arrivals, arrivals[-1] + dt_after]:
+            for h in (0.0, horizon):
+                f = fc.forecast(now, h)
+                assert f >= 0.0 and math.isfinite(f)
+            assert fc.rate(now) >= 0.0 and math.isfinite(fc.rate(now))
+            assert math.isfinite(fc.trend(now))
+            assert fc.cv2(now) >= 0.0 and math.isfinite(fc.cv2(now))
+            eta = fc.eta(now)
+            assert eta is None or (eta > 0.0 and math.isfinite(eta))
+
+    @given(st.floats(0.001, 0.05), st.floats(0.0, 1.0))
+    @settings(max_examples=60, deadline=None)
+    def test_constant_rate_converges(self, gap, probe):
+        """A constant-gap stream reads the true rate 1/gap to within the
+        window's counting quantization (one arrival per window). The
+        query sits at the observation frontier, as in the serving plane
+        (a consumer's clock never runs behind admitted arrivals)."""
+        fc = ArrivalForecaster(CFG)
+        now = 2.0 * W + probe * 2.0 * W
+        t = 0.0
+        while t <= now:
+            fc.observe(t)
+            t += gap
+        rate = fc.rate(now)
+        assert abs(rate - 1.0 / gap) <= 1.0 / W + 1e-9
+        # with zero horizon the forecast IS the windowed rate
+        assert fc.forecast(now, 0.0) == rate
+
+    @given(st.floats(0.004, 0.05), st.floats(2.0, 8.0), st.floats(0.0, 1.0))
+    @settings(max_examples=60, deadline=None)
+    def test_step_change_absorbed_within_two_windows(self, gap, factor,
+                                                     probe):
+        """After a rate step (gap -> gap/factor) at t_step, any query at
+        t_step + 2W or later sees only post-step arrivals in both
+        windows: the estimate has fully converged to the new rate."""
+        fc = ArrivalForecaster(CFG)
+        t_step = 4.0 * W
+        now = t_step + 2.0 * W + probe * 2.0 * W
+        t, new_gap = 0.0, gap / factor
+        while t < t_step:
+            fc.observe(t)
+            t += gap
+        while t <= now:
+            fc.observe(t)
+            t += new_gap
+        assert abs(fc.rate(now) - 1.0 / new_gap) <= 1.0 / W + 1e-9
+
+    @given(GAPS)
+    @settings(max_examples=100, deadline=None)
+    def test_deterministic_under_replay(self, gaps):
+        """Same arrivals -> byte-identical forecast series."""
+        arrivals = _arrivals(gaps)
+        queries = [(t + 0.3 * W, 0.5 * W) for t in arrivals]
+        a, b = ArrivalForecaster(CFG), ArrivalForecaster(CFG)
+        for t in arrivals:
+            a.observe(t)
+            b.observe(t)
+        assert _series(a, queries) == _series(b, queries)
+
+    @given(GAPS)
+    @settings(max_examples=60, deadline=None)
+    def test_queries_are_pure(self, gaps):
+        """Interleaving extra reads must not perturb later reads: one
+        instance is queried after every observation, the other only at
+        the end — the final reads agree byte-for-byte."""
+        arrivals = _arrivals(gaps)
+        chatty, quiet = ArrivalForecaster(CFG), ArrivalForecaster(CFG)
+        for t in arrivals:
+            chatty.observe(t)
+            chatty.snapshot(t + 0.1 * W)    # extra mid-stream reads
+            quiet.observe(t)
+        final = [(arrivals[-1] + f * W, h)
+                 for f in (0.0, 0.5, 1.5) for h in (0.0, W)]
+        assert _series(chatty, final) == _series(quiet, final)
+
+    @given(GAPS, st.floats(0.0, 2.0))
+    @settings(max_examples=60, deadline=None)
+    def test_idle_stream_decays_to_zero(self, gaps, horizon):
+        """One full window after the last arrival the rate window is
+        empty: rate, trend, and forecast are exactly zero, eta is None,
+        and there is no signal."""
+        fc = ArrivalForecaster(CFG)
+        last = 0.0
+        for t in _arrivals(gaps):
+            fc.observe(t)
+            last = t
+        now = last + W + 1e-9
+        assert fc.rate(now) == 0.0
+        assert fc.trend(now) == 0.0
+        assert fc.forecast(now, horizon) == 0.0
+        assert fc.eta(now) is None
+        assert not fc.has_signal(now)
+
+
+class TestForecastUnits:
+    def test_trend_positive_on_ramp_negative_on_ebb(self):
+        up = ArrivalForecaster(CFG)
+        t, gap = 0.0, 0.02
+        while t < 2.0:                  # accelerating stream
+            up.observe(t)
+            gap = max(0.002, 0.02 - 0.009 * t)
+            t += gap
+        assert up.trend(2.0) > 0.0
+        ebb = ArrivalForecaster(CFG)
+        t, gap = 0.0, 0.002
+        while t < 2.0:                  # decelerating stream
+            ebb.observe(t)
+            gap = min(0.02, 0.002 + 0.009 * t)
+            t += gap
+        assert ebb.trend(2.0) < 0.0
+        # and the forecast leads the windowed rate accordingly
+        assert up.forecast(2.0, W) > up.rate(2.0)
+        assert ebb.forecast(2.0, W) < ebb.rate(2.0)
+
+    def test_burst_detector_cv2(self):
+        uniform = ArrivalForecaster(CFG)
+        for i in range(50):
+            uniform.observe(i * 0.01)
+        assert uniform.cv2(0.5) < 0.1
+        assert not uniform.bursty(0.5)
+        # 1-in-k spike trains have gap CV^2 -> k-1: 8 back-to-back then
+        # a lull reads ~7, comfortably past the 4.0 threshold
+        bursty = ArrivalForecaster(CFG)
+        t = 0.0
+        for burst in range(8):
+            for _ in range(8):
+                bursty.observe(t)
+                t += 1e-4
+            t += 0.1
+        assert bursty.cv2(t) >= CFG.burst_cv2
+        assert bursty.bursty(t - 0.1)   # queried inside the active stream
+
+    def test_eta_is_inverse_rate(self):
+        fc = ArrivalForecaster(CFG)
+        for i in range(100):
+            fc.observe(i * 0.01)
+        now = 1.0
+        assert fc.eta(now) == pytest.approx(1.0 / fc.rate(now))
+
+    def test_opening_burst_reads_high_without_blowup(self):
+        """Arrivals faster than the window fills read at their true
+        high rate immediately (the reactive-burst requirement), and the
+        very first arrival alone reads 0, not infinity."""
+        fc = ArrivalForecaster(CFG)
+        fc.observe(0.0)
+        assert fc.rate(0.0) == 0.0
+        for i in range(1, 11):
+            fc.observe(i * 0.001)
+        assert fc.rate(0.01) == pytest.approx(1000.0)
+
+    def test_stale_observation_is_merged_not_corrupting(self):
+        """A re-routed query's original (older) arrival timestamp lands
+        in order and cannot inflate the current window."""
+        a, b = ArrivalForecaster(CFG), ArrivalForecaster(CFG)
+        times = [0.0, 0.1, 0.2, 0.3, 0.4]
+        for t in times:
+            a.observe(t)
+            b.observe(t)
+        a.observe(0.25)                 # stale re-route
+        assert a.rate(0.4 + 2 * W) == b.rate(0.4 + 2 * W) == 0.0
+        assert a.rate(0.41) >= b.rate(0.41)   # one more in-window arrival
+
+    def test_snapshot_keys_and_flags(self):
+        fc = ArrivalForecaster(CFG)
+        for i in range(20):
+            fc.observe(i * 0.01)
+        snap = fc.snapshot(0.2)
+        for key in ("t", "n_observed", "rate", "trend", "slope",
+                    "forecast_1w", "eta", "cv2", "bursty", "has_signal"):
+            assert key in snap
+        assert snap["n_observed"] == 20.0
+        assert snap["has_signal"] == 1.0
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            ForecastConfig(window=0.0).validate()
+        with pytest.raises(ValueError):
+            ForecastConfig(alpha=0.0).validate()
+        with pytest.raises(ValueError):
+            ForecastConfig(beta=1.5).validate()
+        with pytest.raises(ValueError):
+            ForecastConfig(min_arrivals=0).validate()
+        with pytest.raises(ValueError):
+            ForecastConfig(cv2_gaps=1).validate()
+        with pytest.raises(ValueError):
+            ForecastConfig(max_horizon=-1.0).validate()
+
+    def test_min_arrivals_gates_signal(self):
+        fc = ArrivalForecaster(ForecastConfig(window=W, min_arrivals=50))
+        for i in range(49):
+            fc.observe(i * 0.001)
+        assert not fc.has_signal(0.049)
+        fc.observe(0.049)
+        assert fc.has_signal(0.049)
+
+    def test_smoothed_tracks_level_and_decays_idle(self):
+        fc = ArrivalForecaster(CFG)
+        for i in range(200):
+            fc.observe(i * 0.01)
+        now = 1.99
+        # constant stream: smoothed ~ windowed rate, both near 100/s
+        assert fc.smoothed(now) == pytest.approx(fc.rate(now), rel=0.15)
+        # idle stream: exactly zero, like forecast()
+        assert fc.smoothed(now + 10 * W, 1.0) == 0.0
+        assert fc.smoothed(now, -5.0) >= 0.0   # horizon clamped
+
+    def test_horizon_clamped_to_max(self):
+        fc = ArrivalForecaster(ForecastConfig(window=W, max_horizon=0.5))
+        t, gap = 0.0, 0.02
+        while t < 2.0:                  # rising rate -> positive trend
+            fc.observe(t)
+            gap = max(0.002, 0.02 - 0.009 * t)
+            t += gap
+        assert fc.forecast(2.0, 100.0) == fc.forecast(2.0, 0.5)

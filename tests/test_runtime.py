@@ -161,3 +161,35 @@ def test_worker_fault_absorbed(served_supernet):
     stats = asyncio.run(main())
     assert stats["served"] == 10
     assert stats["slo_attainment"] > 0.8
+
+
+def test_predictive_joins_in_runtime(served_supernet):
+    """Live wall-clock predictive windows (ISSUE 5): a SINGLE-worker
+    pool never has spare capacity, so spare-capacity-only continuous
+    batching can never open a window — but once the live forecaster
+    has signal, the steady cadence forecasts the next arrival inside
+    the slack budget and the last (only) worker holds a window that
+    in-flight arrivals join."""
+    cfg, step_fn, pad, prof = served_supernet
+
+    async def main():
+        workers = runtime.make_supernet_workers(1, step_fn, pad)
+        router = runtime.Router(
+            prof, policies.SlackFit(), workers,
+            engine_cfg=runtime.EngineConfig(predictive_joins=True))
+        await router.start()
+        futs = []
+        for _ in range(30):
+            futs.append(await router.submit(np.ones((8,), np.int32),
+                                            slo_s=5.0))
+            await asyncio.sleep(0.01)   # steady, forecastable cadence
+        results = await asyncio.gather(*futs)
+        await router.drain()
+        return router, results
+
+    router, results = asyncio.run(main())
+    assert router.stats()["served"] == 30
+    assert all(p is not None for p, _ in results)
+    # windows opened with NO spare worker, and arrivals joined them
+    assert router.engine.n_predictive_windows >= 1
+    assert router.engine.n_joins >= 1
