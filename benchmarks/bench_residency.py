@@ -1,0 +1,232 @@
+"""Residency as a first-class layer: subnet-residency-aware placement
+(``actuation_aware``) and the sticky scheduling policy
+(``slackfit_sticky``) vs residency-blind baselines (ROADMAP
+"subnet-residency-aware placement", via serving/residency.py).
+
+All gated cells run the weight-loading regime (``load_on_switch`` — the
+Clipper+/INFaaS cost model, paper Fig 1a) on the multi-subnet MAF
+trace, where queue pressure walks SlackFit across Pareto points and
+every walk pays a full weight page-in. The claims that gate:
+
+  * **placement duel** — with the policy held fixed (slackfit_sticky),
+    ``actuation_aware`` placement attains goodput >= ``slack_aware``
+    at equal SLO, on both trace seeds: pricing the likely subnet's
+    switch cost into routing packs queries onto already-resident
+    replicas instead of forcing page-ins on whoever is free;
+  * **stacked regime** — the full residency-aware stack (sticky +
+    actuation_aware) vs the residency-blind baseline (slackfit +
+    slack_aware): ``switch_rate`` drops >= 4x and goodput improves;
+  * **sticky engine** — single-engine slackfit_sticky vs slackfit:
+    ``switch_rate`` drops >= 4x with no SLO regression;
+  * **weight sharing rescues the churn** — the same churny slackfit
+    baseline loses nothing under SubNetAct's ~50 us control swap
+    (``load_on_switch=False``): residency awareness is exactly the
+    price of NOT weight-sharing (paper Fig 1a vs 5b).
+
+Structural claims (always gated, --smoke included):
+
+  * switch accounting reconstructs bit-exactly from the dispatch
+    stream (independent residency walk over the records);
+  * ``switch_rate`` / ``actuation_seconds`` well-formed in every cell;
+  * the gated trace really is multi-subnet (>= 2 distinct Pareto
+    points dispatched);
+  * cluster residency introspection (``residency_snapshot``) is
+    complete, read-only keyed by alive replicas, and residency dies
+    with a failed replica.
+
+--smoke (CI): seconds-long traces; only the structural claims gate.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+
+from benchmarks.common import banner, save, table
+from repro.configs import get_config
+from repro.serving import cluster, policies, profiler, simulator, traces
+from repro.serving.engine import SchedulingEngine
+from repro.serving.queue import Query
+from repro.serving.residency import ActuationModel
+
+MAF_RATE = 8000                 # cluster cells: 4x2 workers near the knee
+SINGLE_RATE = 2000              # single-engine cell: 8 workers, churny
+SEEDS = (7, 42)
+N_REPLICAS, WORKERS_PER_REPLICA = 4, 2
+N_WORKERS = 8                   # single-engine pool
+SLO = 0.036
+SWITCH_DROP = 4.0               # x drop in switch_rate that counts
+SLO_TOL = 0.002                 # sticky non-regression tolerance (pts)
+
+
+def _cluster_run(arr, prof, pol, placement, load=True):
+    ccfg = simulator.ClusterConfig(
+        n_replicas=N_REPLICAS, workers_per_replica=WORKERS_PER_REPLICA,
+        placement=placement, slo=SLO, load_on_switch=load)
+    res = simulator.simulate_cluster(arr, prof, pol, ccfg)
+    st = res.stats()
+    return {"slo": res.slo_attainment, "acc": res.mean_acc,
+            "switch_rate": st["switch_rate"],
+            "actuation_seconds": st["actuation_seconds"],
+            "n_switches": res.n_switches, "n_dispatches": len(res.dispatches)}
+
+
+def _single_run(arr, prof, pol, load=True):
+    scfg = simulator.SimConfig(n_workers=N_WORKERS, slo=SLO,
+                               load_on_switch=load)
+    res = simulator.simulate(arr, prof, pol, scfg)
+    st = res.stats()
+    return res, {"slo": res.slo_attainment, "acc": res.mean_acc,
+                 "switch_rate": st["switch_rate"],
+                 "actuation_seconds": st["actuation_seconds"],
+                 "n_switches": res.n_switches,
+                 "n_dispatches": len(res.dispatches)}
+
+
+def _accounting_reconstructs(res, prof, load) -> bool:
+    """Walk the dispatch stream with an independent residency map and
+    the same ActuationModel: the switch count must match exactly and
+    the booked actuation-seconds bit-for-bit (same accumulation
+    order as the tracker's per-launch ``+=``)."""
+    model = ActuationModel(load_on_switch=load)
+    resident, n_switches, seconds = {}, 0, 0.0
+    for d in res.dispatches:
+        prev = resident.get(d.worker)
+        if prev != d.pareto_idx:
+            n_switches += 1
+        seconds += model.switch_cost(prof, prev, d.pareto_idx)
+        resident[d.worker] = d.pareto_idx
+    return n_switches == res.n_switches and seconds == res.actuation_seconds
+
+
+def _well_formed(cells) -> bool:
+    return all(0 <= c["n_switches"] <= c["n_dispatches"]
+               and 0.0 <= c["switch_rate"] <= 1.0
+               and math.isfinite(c["actuation_seconds"])
+               and c["actuation_seconds"] >= 0.0
+               for c in cells)
+
+
+def _introspection_claim(prof) -> bool:
+    """residency_snapshot() covers exactly the alive replicas with one
+    entry per worker (fresh pools: all None), and a replica death drops
+    its residency from the snapshot entirely."""
+    engines = [SchedulingEngine(prof, policies.SlackFit(),
+                                worker_ids=range(2), replica_id=rid)
+               for rid in range(3)]
+    coord = cluster.ClusterCoordinator(engines, cluster.ActuationAware())
+    snap = coord.residency_snapshot()
+    fresh_ok = (set(snap) == {0, 1, 2}
+                and all(set(v) == {0, 1}
+                        and all(r is None for r in v.values())
+                        for v in snap.values()))
+    coord.fail_replica(1, now=0.0)
+    after = coord.residency_snapshot()
+    return fresh_ok and set(after) == {0, 2}
+
+
+def run(duration: float = 10.0, smoke: bool = False) -> dict:
+    banner("bench_residency (ROADMAP subnet-residency-aware placement)")
+    prof = profiler.build_profile(get_config("ofa_resnet"))
+
+    # -- placement duel: policy fixed, placements differ ----------------
+    placement_cells, claims, rows = {}, {}, []
+    for seed in SEEDS:
+        arr = traces.maf_like_trace(MAF_RATE, duration, seed=seed)
+        cell = {}
+        for plc in ("slack_aware", "actuation_aware"):
+            cell[plc] = _cluster_run(arr, prof, policies.StickySlackFit(),
+                                     plc)
+            rows.append([f"maf_s{seed}", plc, f"{cell[plc]['slo']:.4f}",
+                         f"{cell[plc]['acc']:.2f}",
+                         f"{cell[plc]['switch_rate']:.4f}",
+                         f"{cell[plc]['actuation_seconds']:.2f}"])
+        placement_cells[f"maf_s{seed}"] = cell
+        claims[f"maf_s{seed}_actuation_aware_goodput_geq_slack_aware"] = (
+            cell["actuation_aware"]["slo"] >= cell["slack_aware"]["slo"])
+    print(table(["cell", "placement", "SLO", "acc", "switch rate",
+                 "actuation-s"], rows))
+
+    # -- stacked: residency-aware stack vs residency-blind baseline -----
+    arr = traces.maf_like_trace(MAF_RATE, duration, seed=SEEDS[0])
+    base = _cluster_run(arr, prof, policies.SlackFit(), "slack_aware")
+    stack = _cluster_run(arr, prof, policies.StickySlackFit(),
+                         "actuation_aware")
+    claims["stack_switch_rate_drops"] = (
+        stack["switch_rate"] * SWITCH_DROP <= base["switch_rate"])
+    claims["stack_goodput_improves"] = stack["slo"] >= base["slo"]
+
+    # -- sticky engine: single pool, policy is the only difference ------
+    arr1 = traces.maf_like_trace(SINGLE_RATE, duration, seed=SEEDS[0])
+    res_b, churn = _single_run(arr1, prof, policies.SlackFit())
+    res_s, sticky = _single_run(arr1, prof, policies.StickySlackFit())
+    claims["sticky_switch_rate_drops"] = (
+        sticky["switch_rate"] * SWITCH_DROP <= churn["switch_rate"])
+    claims["sticky_no_slo_regression"] = (
+        sticky["slo"] >= churn["slo"] - SLO_TOL)
+
+    # -- control-swap regime: weight sharing rescues the churn ----------
+    res_w, swap = _single_run(arr1, prof, policies.SlackFit(), load=False)
+    claims["weight_sharing_rescues_churny_baseline"] = (
+        swap["slo"] >= churn["slo"] + 0.5)
+
+    srows = [["stack(blind)", base["slo"], base["switch_rate"]],
+             ["stack(aware)", stack["slo"], stack["switch_rate"]],
+             ["engine(slackfit)", churn["slo"], churn["switch_rate"]],
+             ["engine(sticky)", sticky["slo"], sticky["switch_rate"]],
+             ["engine(slackfit, control-swap)", swap["slo"],
+              swap["switch_rate"]]]
+    print()
+    print(table(["cell", "SLO", "switch rate"],
+                [[c, f"{s:.4f}", f"{w:.4f}"] for c, s, w in srows]))
+
+    # -- structural soundness (always gated, smoke included) ------------
+    all_cells = ([c[p] for c in placement_cells.values() for p in c]
+                 + [base, stack, churn, sticky, swap])
+    structural = {
+        "switch_accounting_reconstructs_from_dispatches": (
+            _accounting_reconstructs(res_b, prof, True)
+            and _accounting_reconstructs(res_s, prof, True)
+            and _accounting_reconstructs(res_w, prof, False)),
+        "switch_metrics_well_formed_all_cells": _well_formed(all_cells),
+        "maf_trace_is_multi_subnet": (
+            len({d.pareto_idx for d in res_b.dispatches}) >= 2),
+        "residency_snapshot_complete_and_dies_with_replica":
+            _introspection_claim(prof),
+    }
+    gated = dict(structural) if smoke else {**structural, **claims}
+    payload = {"placement": placement_cells,
+               "stack": {"blind": base, "aware": stack},
+               "sticky": {"slackfit": churn, "sticky": sticky,
+                          "control_swap": swap},
+               "smoke": smoke,
+               "config": {"maf_rate": MAF_RATE, "single_rate": SINGLE_RATE,
+                          "seeds": list(SEEDS), "n_replicas": N_REPLICAS,
+                          "workers_per_replica": WORKERS_PER_REPLICA,
+                          "n_workers": N_WORKERS, "slo": SLO,
+                          "switch_drop": SWITCH_DROP, "slo_tol": SLO_TOL},
+               "perf_claims_informational": claims if smoke else None,
+               "claims": gated}
+    save("residency", payload)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float, default=10.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace; gate only structural claims")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.duration = min(args.duration, 2.5)
+    payload = run(args.duration, smoke=args.smoke)
+    failures = [k for k, ok in payload["claims"].items() if not ok]
+    if failures:
+        print(f"\nFAILED claims: {failures}")
+        return 1
+    print("\nall residency claims PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

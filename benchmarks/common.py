@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import json
+import math
 import os
 from typing import Any, Dict, List
 
@@ -12,6 +13,34 @@ def save(name: str, payload: Dict[str, Any]) -> None:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
         json.dump(payload, f, indent=1, default=str)
+
+
+def emit_bench_json(name: str, payload: Dict[str, Any]) -> str:
+    """Write the compact claims-first artifact ``BENCH_<name>.json``:
+    the bench's claim booleans plus every finite numeric scalar from
+    the payload, flattened to dotted keys (lists and strings skipped).
+    CI uploads these so a claim regression is diffable without wading
+    through the full result payload; returns the written path."""
+    claims = dict(payload.get("claims") or {})
+    scalars: Dict[str, float] = {}
+
+    def walk(prefix: str, node: Dict[str, Any]) -> None:
+        for k, v in node.items():
+            key = f"{prefix}.{k}" if prefix else str(k)
+            if isinstance(v, dict):
+                walk(key, v)
+            elif isinstance(v, bool) or v is None:
+                continue
+            elif isinstance(v, (int, float)) and math.isfinite(v):
+                scalars[key] = float(v)
+
+    walk("", {k: v for k, v in payload.items() if k != "claims"})
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": name, "claims": claims, "scalars": scalars},
+                  f, indent=1, sort_keys=True)
+    return path
 
 
 def table(headers: List[str], rows: List[List[Any]]) -> str:

@@ -24,8 +24,9 @@ from benchmarks import (bench_acceleration, bench_actuation,
                         bench_ilp_oracle, bench_control_space,
                         bench_fault_tolerance, bench_maf, bench_memory,
                         bench_pareto, bench_policies, bench_predictive,
-                        bench_scalability, bench_throughput_range)
-from benchmarks.common import banner, save, table
+                        bench_residency, bench_scalability,
+                        bench_throughput_range)
+from benchmarks.common import banner, emit_bench_json, save, table
 
 ALL = {
     "actuation": bench_actuation.run,            # Fig 1a / 5b
@@ -38,6 +39,7 @@ ALL = {
     "cluster_scaleout": bench_cluster_scaleout.run,  # multi-replica plane
     "autoscaling": bench_autoscaling.run,        # reactive replica scaling
     "predictive": bench_predictive.run,          # forecast-led scaling + joins
+    "residency": bench_residency.run,            # residency-aware placement
     "acceleration": bench_acceleration.run,      # Fig 9
     "maf": bench_maf.run,                        # Fig 10
     "fault_tolerance": bench_fault_tolerance.run,  # Fig 11a
@@ -61,6 +63,10 @@ def main(argv=None) -> int:
                     help="run benchmarks whose name contains any SUBSTR")
     ap.add_argument("--skip", nargs="*", default=[],
                     help="skip benchmarks whose name contains any SUBSTR")
+    ap.add_argument("--emit-bench-json", action="store_true",
+                    help="also write results/bench/BENCH_<name>.json per "
+                         "bench: claims + flattened numeric scalars (the "
+                         "compact artifact CI uploads)")
     args = ap.parse_args(argv)
 
     names = select(args.only, args.skip)
@@ -73,6 +79,8 @@ def main(argv=None) -> int:
         t0 = time.time()
         try:
             payload = ALL[name]()
+            if args.emit_bench_json:
+                emit_bench_json(name, payload)
             for claim, ok in (payload.get("claims") or {}).items():
                 scoreboard.append([name, claim, "PASS" if ok else "FAIL"])
                 if not ok:

@@ -78,11 +78,25 @@ def main():
     ap.add_argument("--scale-policy", default="queue_pressure",
                     choices=sorted(k for k in SCALINGS if k != "scripted"),
                     help="autoscaling signal (see serving/autoscaler.py)")
-    ap.add_argument("--cold-start", type=float, default=0.1,
-                    help="spawn -> routable actuation cost (s)")
+    ap.add_argument("--cold-start", default="0.1",
+                    help="spawn -> routable actuation cost (s), or 'auto' "
+                         "to derive it from the ActuationModel as a full "
+                         "weight-load of the heaviest subnet")
     ap.add_argument("--scale-cooldown", type=float, default=0.5,
                     help="min gap before a scale-down (s)")
+    ap.add_argument("--load-on-switch", action="store_true",
+                    help="charge a full weight page-in per subnet switch "
+                         "(the non-weight-shared Clipper+/INFaaS cost "
+                         "model) instead of the SubNetAct control swap — "
+                         "the regime where --placement actuation_aware "
+                         "and --policy slackfit_sticky earn their keep")
     args = ap.parse_args()
+    try:
+        cold_start = (None if args.cold_start == "auto"
+                      else float(args.cold_start))
+    except ValueError:
+        ap.error(f"--cold-start must be a number or 'auto', "
+                 f"got {args.cold_start!r}")
 
     cfg = get_config(args.arch)
     prof = profiler.build_profile(cfg)
@@ -123,7 +137,7 @@ def main():
             autoscale = AutoscaleConfig(
                 min_replicas=args.min_replicas,
                 max_replicas=args.max_replicas, policy=args.scale_policy,
-                cold_start=args.cold_start, cooldown=args.scale_cooldown,
+                cold_start=cold_start, cooldown=args.scale_cooldown,
                 # the shared estimator window tunes the FORECAST-led
                 # policy only (its reactive fallback stays comparable);
                 # a plain reactive run keeps its own default window
@@ -140,6 +154,7 @@ def main():
             n_replicas=args.replicas, workers_per_replica=args.workers,
             placement=args.placement, placement_seed=args.seed,
             slo=args.slo_ms / 1e3, fault_times=faults, replica_deaths=deaths,
+            load_on_switch=args.load_on_switch,
             continuous_batching=args.continuous_batching,
             predictive_joins=args.predictive_joins, forecast=forecast,
             autoscale=autoscale)
@@ -172,6 +187,7 @@ def main():
                 faults[int(wid)] = float(t)
         scfg = simulator.SimConfig(n_workers=args.workers,
                                    slo=args.slo_ms / 1e3,
+                                   load_on_switch=args.load_on_switch,
                                    fault_times=faults, seed=args.seed,
                                    continuous_batching=args.continuous_batching,
                                    predictive_joins=args.predictive_joins,
@@ -181,12 +197,15 @@ def main():
         res = simulator.simulate(arr, prof, pol, scfg)
         extra = ({"predictive_windows": res.n_predictive_windows}
                  if args.predictive_joins else {})
+    st = res.stats()
     out = {"arch": args.arch, "policy": pol.name, "queries": len(arr),
            "continuous_batching": args.continuous_batching,
            "slo_attainment": res.slo_attainment, "mean_acc": res.mean_acc,
            "p50_latency_ms": res.latency_p50 * 1e3,
            "p99_latency_ms": res.latency_p99 * 1e3,
-           "join_rate": res.n_joins / max(len(arr), 1), **extra}
+           "join_rate": res.n_joins / max(len(arr), 1),
+           "switch_rate": st["switch_rate"],
+           "actuation_seconds": st["actuation_seconds"], **extra}
     print(json.dumps(out, indent=1))
 
 

@@ -26,4 +26,15 @@ feeds the predictive scaling policy, the engine's predictive join
 windows at saturation, and coordinator forecast introspection.
 Layering rule: forecasting state lives in forecast.py only —
 coordinator/engines own and feed it, policies consume it, transports
-never mutate it."""
+never mutate it.
+
+Residency (serving/residency.py): a per-engine ResidencyTracker owns
+which subnet each worker last actuated, and an ActuationModel prices
+switches (SubNetAct control swap vs full weight page-in) and replica
+cold starts from one physical model. Consumers: the actuation_aware
+placement, the slackfit_sticky policy, autoscaler cold-start
+derivation, and the switch_rate / actuation_seconds metrics. Layering
+rule: residency state lives in residency.py only — the engine is its
+sole writer (actuate on launch, forget on death), everything else
+reads; residency-blind configs replay pre-refactor schedules
+bit-for-bit."""

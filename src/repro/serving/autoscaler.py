@@ -58,7 +58,11 @@ class AutoscaleConfig:
     # SubNetAct-style reactivity is the whole point — and over-spawning
     # is checked by counting warming capacity into the pressure signal.
     cooldown: float = 0.50
-    cold_start: float = 0.10        # spawn -> routable actuation cost (s)
+    # spawn -> routable actuation cost (s); None derives it from the
+    # cluster's own ActuationModel (serving/residency.py) as a full
+    # weight-load of the heaviest subnet — replica cold start and
+    # per-batch switch cost then share one physical model
+    cold_start: Optional[float] = 0.10
     # workers per spawned replica; None -> the transport's per-replica
     # worker count (heterogeneous clusters must set it explicitly)
     spawn_workers: Optional[int] = None
@@ -96,7 +100,8 @@ class AutoscaleConfig:
             raise ValueError("max_replicas must be >= min_replicas")
         if self.interval <= 0:
             raise ValueError("interval must be > 0")
-        if self.cold_start < 0 or self.cooldown < 0:
+        if ((self.cold_start is not None and self.cold_start < 0)
+                or self.cooldown < 0):
             raise ValueError("cold_start/cooldown must be >= 0")
         if self.horizon is not None and self.horizon < 0:
             raise ValueError("horizon must be >= 0")
@@ -204,7 +209,7 @@ class QueuePressure(ScalingPolicy):
         return self._arrival_rate(coord, now)
 
     def decide(self, coord, routable, now, warming_workers=0):
-        workers = (sum(max(len(e.worker_model), 1) for _, e in routable)
+        workers = (sum(max(len(e.residency), 1) for _, e in routable)
                    + warming_workers)
         sustainable = self._max_tput(routable[0][1]) * self.util_target
         need = self._demand_rate(coord, now) / max(sustainable, 1e-9)
@@ -349,13 +354,20 @@ SCALINGS: Dict[str, str] = {
 }
 
 
-def make_scaling(cfg: AutoscaleConfig, slo: float) -> ScalingPolicy:
+def make_scaling(cfg: AutoscaleConfig, slo: float,
+                 cold_start: Optional[float] = None) -> ScalingPolicy:
+    """``cold_start`` is the *resolved* spawn actuation (the
+    ClusterAutoscaler passes its ActuationModel-derived value when
+    ``cfg.cold_start`` is None) — the predictive horizon must match
+    what a spawn actually pays."""
+    if cold_start is None:
+        cold_start = cfg.cold_start if cfg.cold_start is not None else 0.0
     if cfg.policy == "queue_pressure":
         return QueuePressure(slo, cfg.up_pressure, cfg.util_target,
                              cfg.down_util, cfg.rate_window)
     if cfg.policy == "predictive":
         horizon = (cfg.horizon if cfg.horizon is not None
-                   else cfg.cold_start + cfg.interval)
+                   else cold_start + cfg.interval)
         return Predictive(slo, cfg.up_pressure, cfg.util_target,
                           cfg.down_util, cfg.rate_window, horizon)
     if cfg.policy == "slo_headroom":
@@ -411,8 +423,18 @@ class ClusterAutoscaler:
         self.cfg = cfg.validate()
         self.engine_factory = engine_factory
         self.migrate_fn = migrate_fn
+        # resolve the spawn actuation once, for both transports: an
+        # explicit cold_start wins; None prices it through the cluster's
+        # own ActuationModel as a full weight-load of the heaviest
+        # subnet (serving/residency.py) — the same model the engines
+        # charge per-batch switches against
+        if cfg.cold_start is not None:
+            self.cold_start = float(cfg.cold_start)
+        else:
+            e0 = coord.engines[0]
+            self.cold_start = e0.residency.model.cold_start(e0.profile)
         self.policy = make_scaling(cfg, cfg.slo if cfg.slo is not None
-                                   else slo)
+                                   else slo, cold_start=self.cold_start)
         self.policy.reset()
         self.events: List[ScaleEvent] = []
         self._t0: Optional[float] = None        # clock origin (first tick)
@@ -472,7 +494,7 @@ class ClusterAutoscaler:
             return out                  # dead / all-warming: nothing to read
         while True:
             warming_workers = sum(
-                len(self.coord.engines[rid].worker_model)
+                len(self.coord.engines[rid].residency)
                 for rid in self._warming)
             delta, signal = self.policy.decide(
                 self.coord, routable, now, warming_workers=warming_workers)
@@ -511,7 +533,7 @@ class ClusterAutoscaler:
         the transport calls ``activate`` then."""
         rid = len(self.coord.engines)
         self.coord.add_replica(self.engine_factory(rid), ready=False)
-        ready_at = now + self.cfg.cold_start
+        ready_at = now + self.cold_start
         self._warming[rid] = ready_at
         self._spans[rid] = [now, None]
         self._last_scale = now
@@ -527,7 +549,7 @@ class ClusterAutoscaler:
         self.coord.mark_ready(rid)
         self.events.append(ScaleEvent(now, "ready", rid, self.n_routable(),
                                       self.n_committed()))
-        return sorted(self.coord.engines[rid].worker_model)
+        return sorted(self.coord.engines[rid].residency.workers())
 
     def decommission(self, rid: int, now: float,
                      signal: float = 0.0) -> ScaleEvent:

@@ -10,7 +10,8 @@ set of engines behind a coordinator":
     re-enqueue — exactly the PR 2 core, per replica);
   * a **ClusterCoordinator** owns global admission and routes every
     query to one replica via a pluggable ``PlacementPolicy``
-    (round-robin, least-loaded, power-of-two-choices, slack-aware);
+    (round-robin, least-loaded, power-of-two-choices, slack-aware,
+    actuation-aware);
   * replica death drains the dead replica's EDF queue — including the
     in-flight queries its worker faults re-enqueued — back through the
     coordinator, which re-routes the orphans to survivors.
@@ -64,7 +65,9 @@ class PlacementPolicy:
     replicas as ``(rid, engine)`` pairs and must return one of the
     offered rids; engines are read-only here (introspection methods
     ``queue_depth`` / ``inflight_depth`` / ``work_ahead`` /
-    ``projected_drain`` only — placement never touches a queue)."""
+    ``projected_drain`` / ``resident_subnets`` /
+    ``projected_switch_cost`` only — placement never touches a queue
+    and never actuates a subnet)."""
 
     name: str = "base"
 
@@ -189,11 +192,48 @@ class SlackAware(PlacementPolicy):
         return rid
 
 
+class ActuationAware(PlacementPolicy):
+    """Residency-aware routing (ROADMAP "actuation-stationary
+    serving"): score every routable replica by when it could *start*
+    the query (``projected_start`` — the slack_aware tight-path signal)
+    plus ``blend`` times the projected *switch cost* of actuating the
+    subnet the query would demand there (``likely_subnet`` x the
+    replica's cheapest residency match, both from the engine's
+    residency introspection). Route to the cheapest sum, ties toward
+    the lowest rid.
+
+    In the SubNetAct regime a switch is a ~50 µs control swap, so this
+    degrades gracefully toward slack_aware's earliest-start rule; in
+    the weight-loading regime (``load_on_switch``, the Clipper+/INFaaS
+    cost model) a switch is a full page-in, and keeping queries on
+    replicas already resident on their subnet is the difference between
+    batches that meet their deadline and batches that burn it on PCIe.
+    Placement stays read-only: residency is consulted, never mutated —
+    only the chosen replica's engine actuates at launch."""
+
+    name = "actuation_aware"
+
+    def __init__(self, blend: float = 1.0):
+        self.blend = float(blend)
+
+    def choose(self, replicas, q, now):
+        slack = max(q.deadline - now, 0.0)
+
+        def score(re):
+            rid, e = re
+            pi = e.likely_subnet(slack)
+            return (e.projected_start(q.deadline, now)
+                    + self.blend * e.projected_switch_cost(pi), rid)
+
+        return min(replicas, key=score)[0]
+
+
 PLACEMENTS: Dict[str, type] = {
     "round_robin": RoundRobin,
     "least_loaded": LeastLoaded,
     "power_of_two": PowerOfTwo,
     "slack_aware": SlackAware,
+    "actuation_aware": ActuationAware,
 }
 
 
@@ -309,7 +349,7 @@ class ClusterCoordinator:
         alive replica whose worker pool is gone can never serve again —
         leave it routable and it black-holes every query placed on
         it."""
-        return self.alive[rid] and not self.engines[rid].worker_model
+        return self.alive[rid] and not len(self.engines[rid].residency)
 
     def fail_replica(self, rid: int, now: float) -> List[Tuple[Query, int]]:
         """Replica ``rid`` died: fault every worker (re-enqueueing its
@@ -317,7 +357,7 @@ class ClusterCoordinator:
         drain the replica's queue back through placement. Returns the
         re-routed ``(query, new_rid)`` pairs, in EDF order."""
         eng = self.engines[rid]
-        for wid in list(eng.worker_model):
+        for wid in eng.residency.workers():
             eng.fault(wid)
         return self.redistribute(rid, now)
 
@@ -349,6 +389,15 @@ class ClusterCoordinator:
             return None
         return self.forecaster.snapshot(now)
 
+    # -- residency introspection ----------------------------------------
+
+    def residency_snapshot(self) -> Dict[int, Dict[int, Optional[int]]]:
+        """Cluster-wide residency map, rid -> (worker -> resident
+        subnet), over alive replicas — read-only (per-replica copies),
+        for benchmarks and operator introspection."""
+        return {rid: e.resident_subnets()
+                for rid, e in enumerate(self.engines) if self.alive[rid]}
+
     # -- accounting ----------------------------------------------------
 
     def abandon_pending(self) -> List[Query]:
@@ -363,7 +412,11 @@ class ClusterCoordinator:
     def stats(self) -> Dict[str, float]:
         return cluster_summarize(
             self.queries, n_replicas=self.n_replicas,
-            n_joins=sum(e.n_joins for e in self.engines))
+            n_joins=sum(e.n_joins for e in self.engines),
+            n_switches=sum(e.residency.n_switches for e in self.engines),
+            n_dispatches=sum(e.residency.n_launches for e in self.engines),
+            actuation_seconds=sum(e.residency.actuation_seconds
+                                  for e in self.engines))
 
 
 # --------------------------------------------------------------------------
@@ -470,8 +523,8 @@ def drive_cluster(coord: ClusterCoordinator, queries: Sequence[Query],
             if rid >= len(coord.engines):   # fault injected for a rid
                 continue                    # the autoscaler never spawned
             if ident == ALL_WORKERS:        # whole replica dies
-                for wid in list(idle.get(rid, [])) + [
-                        w for w in coord.engines[rid].worker_model]:
+                for wid in list(idle.get(rid, [])) + \
+                        coord.engines[rid].residency.workers():
                     dead_workers.add((rid, wid))
                 idle.get(rid, []).clear()
                 was_alive = coord.alive[rid]

@@ -30,9 +30,9 @@ from repro.serving.forecast import ArrivalForecaster, ForecastConfig
 from repro.serving.metrics import summarize
 from repro.serving.policies import Policy
 from repro.serving.profiler import (RTX2080TI, SUBNETACT_ACTUATION_S,
-                                    HardwareProfile, LatencyProfile,
-                                    loading_latency)
+                                    HardwareProfile, LatencyProfile)
 from repro.serving.queue import EDFQueue, Query
+from repro.serving.residency import ActuationModel, ResidencyTracker
 
 
 # --------------------------------------------------------------------------
@@ -167,8 +167,16 @@ class SchedulingEngine:
         self.min_service = float(profile.lat.min())
         self.edf = EDFQueue()
         self.queries: List[Query] = []          # every admitted query
-        self.worker_model: Dict[int, Optional[int]] = {
-            int(w): None for w in worker_ids}
+        # single owner of per-worker subnet residency and switch-cost
+        # estimation (serving/residency.py); the engine is the only
+        # writer — everything else (placement, policies, autoscaler)
+        # reads through it
+        self.residency = ResidencyTracker(
+            profile,
+            ActuationModel(actuation_delay=self.cfg.actuation_delay,
+                           load_on_switch=self.cfg.load_on_switch,
+                           hw=self.cfg.hw),
+            worker_ids=worker_ids)
         self.inflight: Dict[int, Dispatch] = {}   # forming or executing
         self.open_batches: Dict[int, Dispatch] = {}
         self.dispatches: List[DispatchRecord] = []
@@ -218,7 +226,8 @@ class SchedulingEngine:
         if not len(self.edf):
             return None
         slack = self.edf.head_slack(now)
-        dec = self.policy.choose(self.profile, slack, len(self.edf))
+        dec = self.policy.choose(self.profile, slack, len(self.edf),
+                                 residency=self.residency.view(wid))
         if dec is None:
             return None
         batch = self.edf.pop_batch(dec.batch_size)
@@ -242,7 +251,7 @@ class SchedulingEngine:
             budget = min(d.batch_deadline - now - est,
                          dec.join_window, self.cfg.max_join_window)
             window, predicted = 0.0, False
-            if len(self.worker_model) > len(self.inflight):
+            if len(self.residency) > len(self.inflight):
                 window = budget
             elif (self.forecaster is not None
                     # never hold the last worker while shedding load: a
@@ -323,7 +332,8 @@ class SchedulingEngine:
         the Pareto frontier with the policy — up in light moments, down
         under pressure), else the batch's current subnet if *it* still
         fits; None when the join is infeasible either way."""
-        dec = self.policy.choose(self.profile, bd - t_launch, size)
+        dec = self.policy.choose(self.profile, bd - t_launch, size,
+                                 residency=self.residency.view(wid))
         if dec is not None and t_launch + self._service_estimate(
                 wid, dec.pareto_idx, size) <= bd:
             return dec.pareto_idx
@@ -350,15 +360,7 @@ class SchedulingEngine:
 
     def _service_estimate(self, wid: int, pi: int, batch_size: int) -> float:
         lat = self.profile.latency(pi, max(batch_size, 1))
-        if self.worker_model.get(wid) != pi:
-            lat += self.cfg.actuation_delay
-            if self.cfg.load_on_switch:
-                lat += loading_latency(self.cfg.hw, self._weight_bytes(pi))
-        return lat
-
-    def _weight_bytes(self, pi: int) -> float:
-        return (self.profile.points[pi].weight_mb * 2**20
-                if self.profile.points else 100e6)
+        return self.residency.penalized(lat, wid, pi)
 
     # -- actuation + completion ----------------------------------------
 
@@ -368,7 +370,7 @@ class SchedulingEngine:
         weight loading) against the worker's resident subnet."""
         eff_b = len(d.queries)
         lat = self._service_estimate(d.wid, d.pareto_idx, eff_b)
-        self.worker_model[d.wid] = d.pareto_idx
+        self.residency.actuate(d.wid, d.pareto_idx)
         d.t_launch = now
         d.service = lat
         d.acc = float(self.profile.accs[d.pareto_idx])
@@ -399,7 +401,7 @@ class SchedulingEngine:
         """Worker died: transparently re-enqueue its in-flight (forming
         or executing) queries so survivors re-serve them (Fig 11a)."""
         self.open_batches.pop(wid, None)
-        self.worker_model.pop(wid, None)
+        self.residency.forget(wid)
         d = self.inflight.pop(wid, None)
         if d is None:
             return []
@@ -456,7 +458,29 @@ class SchedulingEngine:
             else:
                 busy += self.min_service
         ahead = self.work_ahead(deadline) * self.min_service
-        return (busy + ahead) / max(len(self.worker_model), 1)
+        return (busy + ahead) / max(len(self.residency), 1)
+
+    def resident_subnets(self) -> Dict[int, Optional[int]]:
+        """Worker -> resident subnet map (read-only copy), alongside
+        ``queue_depth``/``work_ahead`` in the placement surface."""
+        return self.residency.residency()
+
+    def likely_subnet(self, slack: float) -> int:
+        """Subnet the policy would pick for an arrival with ``slack``
+        joining this replica's queue — the placement-side estimate of
+        what routing a query here would actuate. Read-only and
+        worker-independent (no residency bias), so it prices the
+        *demand*, not a particular worker."""
+        dec = self.policy.choose(self.profile, slack,
+                                 self.queue_depth() + 1)
+        if dec is not None:
+            return dec.pareto_idx
+        return int(self.profile.lat[:, 0].argmin())
+
+    def projected_switch_cost(self, pi: int) -> float:
+        """Cheapest actuation cost any of this replica's workers would
+        pay to serve subnet ``pi`` (0.0 when one is already resident)."""
+        return self.residency.min_switch_cost(pi)
 
     def projected_drain(self, now: float) -> float:
         """Estimate (s) of when this replica would drain ALL queued +
@@ -477,7 +501,10 @@ class SchedulingEngine:
         return completion_records(self.queries)
 
     def stats(self) -> Dict[str, float]:
-        return summarize(self.queries, n_joins=self.n_joins)
+        return summarize(self.queries, n_joins=self.n_joins,
+                         n_switches=self.residency.n_switches,
+                         n_dispatches=self.residency.n_launches,
+                         actuation_seconds=self.residency.actuation_seconds)
 
 
 # --------------------------------------------------------------------------

@@ -48,10 +48,15 @@ def latency_percentiles(queries: Sequence[Query],
     return [float(np.percentile(lats, p)) for p in ps]
 
 
-def summarize(queries: Sequence[Query], n_joins: int = 0) -> Dict[str, float]:
+def summarize(queries: Sequence[Query], n_joins: int = 0,
+              n_switches: int = 0, n_dispatches: int = 0,
+              actuation_seconds: float = 0.0) -> Dict[str, float]:
     """One-stop serving report: SLO attainment, mean serving accuracy,
-    p50/p99 end-to-end latency, and the continuous-batching join rate
-    (fraction of queries admitted into an already-forming batch)."""
+    p50/p99 end-to-end latency, the continuous-batching join rate
+    (fraction of queries admitted into an already-forming batch), and
+    the residency accounting — ``switch_rate`` (fraction of batch
+    launches that actuated a different subnet than the worker's
+    resident one) and total ``actuation_seconds`` paid on switches."""
     p50, p99 = latency_percentiles(queries)
     resolved = sum(1 for q in queries if q.finish is not None or q.dropped)
     return {
@@ -61,6 +66,8 @@ def summarize(queries: Sequence[Query], n_joins: int = 0) -> Dict[str, float]:
         "p50_latency_s": p50,
         "p99_latency_s": p99,
         "join_rate": n_joins / len(queries) if len(queries) else 0.0,
+        "switch_rate": n_switches / n_dispatches if n_dispatches else 0.0,
+        "actuation_seconds": float(actuation_seconds),
     }
 
 
@@ -120,14 +127,20 @@ def load_imbalance(queries: Sequence[Query], n_replicas: int = 0,
 
 def cluster_summarize(queries: Sequence[Query], n_replicas: int = 0,
                       n_joins: int = 0,
-                      replica_spans: Optional[Dict[int, float]] = None
+                      replica_spans: Optional[Dict[int, float]] = None,
+                      n_switches: int = 0, n_dispatches: int = 0,
+                      actuation_seconds: float = 0.0
                       ) -> Dict[str, float]:
     """Aggregate serving report plus the load-imbalance metric; the
     per-replica breakdown rides under the ``replicas`` key. With
     ``replica_spans`` (autoscaled runs) the report adds the provisioned
     ``replica_seconds`` and the goodput-per-replica-second efficiency
-    figure (SLO-satisfying completions per unit of capacity-time)."""
-    out = summarize(queries, n_joins=n_joins)
+    figure (SLO-satisfying completions per unit of capacity-time).
+    The switch counters aggregate every replica's residency tracker, so
+    ``switch_rate`` is cluster-wide (switches per batch launch)."""
+    out = summarize(queries, n_joins=n_joins, n_switches=n_switches,
+                    n_dispatches=n_dispatches,
+                    actuation_seconds=actuation_seconds)
     out["load_imbalance"] = load_imbalance(queries, n_replicas,
                                            replica_spans=replica_spans)
     out["replicas"] = per_replica_stats(

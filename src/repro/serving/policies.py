@@ -38,12 +38,19 @@ def _join_window(profile: LatencyProfile, pi: int, bi: int,
 
 class Policy:
     """Pluggable policy API (paper §5: 'scheduler provides pluggable
-    APIs for different policy implementations')."""
+    APIs for different policy implementations').
+
+    ``residency`` is an optional read-only view of the candidate
+    worker's subnet residency (serving/residency.py ``ResidencyView``:
+    ``.resident`` + ``.switch_cost(pi)``). Residency-blind policies —
+    every baseline here — ignore it, which keeps their schedules
+    bit-identical to the pre-residency stack; residency-aware variants
+    (``slackfit_sticky``) consult it to prefer the resident subnet."""
 
     name: str = "base"
 
     def choose(self, profile: LatencyProfile, slack: float,
-               queue_len: int) -> Optional[Decision]:
+               queue_len: int, residency=None) -> Optional[Decision]:
         raise NotImplementedError
 
     def reset(self) -> None:  # per-run state, if any
@@ -64,7 +71,7 @@ class SlackFit(Policy):
 
     name = "slackfit"
 
-    def choose(self, profile, slack, queue_len):
+    def choose(self, profile, slack, queue_len, residency=None):
         pi, bi = profile.choose_slackfit(slack, queue_len)
         return Decision(pi, profile.batches[bi],
                         _join_window(profile, pi, bi, slack))
@@ -77,7 +84,7 @@ class MaxBatch(Policy):
 
     name = "maxbatch"
 
-    def choose(self, profile, slack, queue_len):
+    def choose(self, profile, slack, queue_len, residency=None):
         lat = profile.lat
         cap = profile.cap_batch_idx(queue_len)
         # largest realizable B such that the *fastest* subnet fits
@@ -99,7 +106,7 @@ class MaxAcc(Policy):
 
     name = "maxacc"
 
-    def choose(self, profile, slack, queue_len):
+    def choose(self, profile, slack, queue_len, residency=None):
         lat = profile.lat
         cap = profile.cap_batch_idx(queue_len)
         order = np.argsort(profile.accs)
@@ -124,7 +131,7 @@ class ClipperFixed(Policy):
     def clone(self) -> "ClipperFixed":
         return ClipperFixed(self.pareto_idx, self.name)
 
-    def choose(self, profile, slack, queue_len):
+    def choose(self, profile, slack, queue_len, residency=None):
         cap = profile.cap_batch_idx(queue_len)
         lat = profile.lat[self.pareto_idx]
         fit = np.where(lat[:cap + 1] <= slack)[0]
@@ -140,7 +147,7 @@ class INFaaSMinCost(Policy):
 
     name = "infaas"
 
-    def choose(self, profile, slack, queue_len):
+    def choose(self, profile, slack, queue_len, residency=None):
         pi = int(np.argmin(profile.accs))
         cap = profile.cap_batch_idx(queue_len)
         lat = profile.lat[pi]
@@ -150,11 +157,48 @@ class INFaaSMinCost(Policy):
                         _join_window(profile, pi, bi, slack))
 
 
+class StickySlackFit(SlackFit):
+    """Residency-aware SlackFit (actuation-stationary serving, the
+    "subgraph stationary" direction of Behnam et al. 2023): keep the
+    worker on its resident subnet when that subnet still meets the
+    slack target at the chosen batch size, instead of actuating
+    whichever tuple SlackFit's bucket landed on.
+
+    Stickiness never sacrifices accuracy for free: the resident subnet
+    is preferred only when it gives at least the accuracy SlackFit
+    chose, OR when the chosen subnet plus its switch cost would miss
+    the slack anyway (the weight-loading regime, where a switch costs
+    a full page-in and stationarity is the difference between meeting
+    and missing the deadline). With no residency view this IS SlackFit,
+    bit for bit."""
+
+    name = "slackfit_sticky"
+
+    def choose(self, profile, slack, queue_len, residency=None):
+        dec = super().choose(profile, slack, queue_len)
+        if dec is None or residency is None:
+            return dec
+        res = residency.resident
+        if res is None or res == dec.pareto_idx:
+            return dec
+        bi = int(np.searchsorted(profile.batches, dec.batch_size))
+        if profile.lat[res, bi] > slack:
+            return dec                   # resident can't meet the target
+        chosen_with_switch = (float(profile.lat[dec.pareto_idx, bi])
+                              + residency.switch_cost(dec.pareto_idx))
+        if (profile.accs[res] >= profile.accs[dec.pareto_idx]
+                or chosen_with_switch > slack):
+            return Decision(res, dec.batch_size,
+                            _join_window(profile, res, bi, slack))
+        return dec
+
+
 ALL_POLICIES = {
     "slackfit": SlackFit,
     "maxbatch": MaxBatch,
     "maxacc": MaxAcc,
     "infaas": INFaaSMinCost,
+    "slackfit_sticky": StickySlackFit,
 }
 
 

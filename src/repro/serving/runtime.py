@@ -54,12 +54,18 @@ class ServedQuery:
 @dataclass
 class WorkerHandle:
     """One worker hosting the supernet. ``run(subnet_idx, payloads)``
-    executes the actuated subnet on a batch and returns predictions."""
+    executes the actuated subnet on a batch and returns predictions.
+
+    The worker's *resident subnet* is deliberately NOT stored here: the
+    engine's ``ResidencyTracker`` (serving/residency.py) is the single
+    owner of that state, committed at ``engine.launch`` — a transport
+    copy could disagree with the scheduler's accounting (the historical
+    ``current_subnet`` duplication, regression-tested in
+    tests/test_residency.py). Read ``Router.resident_subnet(wid)``."""
 
     wid: int
     run: Callable[[int, List[Any]], Any]
     alive: bool = True
-    current_subnet: int = -1
 
 
 class Router:
@@ -228,7 +234,6 @@ class Router:
             # SubNetAct actuation == a different control tuple; executed
             # in a thread so the event loop keeps routing.
             preds = await asyncio.to_thread(worker.run, d.pareto_idx, payloads)
-            worker.current_subnet = d.pareto_idx
         else:
             preds = []
         fin = self.clock.now()
@@ -269,6 +274,13 @@ class Router:
             if not sq.done.done():
                 sq.done.set_result((None, 0.0))
         self._payloads.clear()
+
+    def resident_subnet(self, wid: int) -> Optional[int]:
+        """The subnet resident on worker ``wid`` per the engine's
+        residency tracker — the transport's single source of truth for
+        'what is loaded where' (the engine actuates at launch, before
+        the batch executes)."""
+        return self.engine.residency.resident(wid)
 
     def stats(self) -> Dict[str, float]:
         return self.engine.stats()
@@ -548,7 +560,13 @@ class ClusterRouter:
                 self.coord.queries, n_replicas=self.coord.n_replicas,
                 n_joins=sum(e.n_joins for e in self.coord.engines),
                 replica_spans=self.autoscaler.replica_spans(
-                    self.clock.now()))
+                    self.clock.now()),
+                n_switches=sum(e.residency.n_switches
+                               for e in self.coord.engines),
+                n_dispatches=sum(e.residency.n_launches
+                                 for e in self.coord.engines),
+                actuation_seconds=sum(e.residency.actuation_seconds
+                                      for e in self.coord.engines))
         else:
             st = self.coord.stats()
         snap = self.coord.forecast_snapshot(self.clock.now())

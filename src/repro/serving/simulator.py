@@ -78,6 +78,9 @@ class SimResult:
     n_joins: int = 0                        # queries joined in flight
     n_open_batches: int = 0                 # batches that opened a window
     n_predictive_windows: int = 0           # opened with no spare worker
+    # residency accounting (serving/residency.py tracker counters)
+    n_switches: int = 0                     # launches that changed subnet
+    actuation_seconds: float = 0.0          # total switch cost paid
 
     @property
     def slo_attainment(self) -> float:
@@ -100,7 +103,10 @@ class SimResult:
         return completion_records(self.queries)
 
     def stats(self) -> Dict[str, float]:
-        return summarize(self.queries, n_joins=self.n_joins)
+        return summarize(self.queries, n_joins=self.n_joins,
+                         n_switches=self.n_switches,
+                         n_dispatches=len(self.dispatches),
+                         actuation_seconds=self.actuation_seconds)
 
     def series(self, window: float = 1.0):
         """Per-window (t, qps, mean batch, mean acc) system dynamics."""
@@ -152,7 +158,9 @@ def simulate(arrivals: Sequence[float], profile: LatencyProfile,
     return SimResult(queries=queries, dispatches=engine.dispatches,
                      duration=duration, n_joins=engine.n_joins,
                      n_open_batches=engine.n_open_batches,
-                     n_predictive_windows=engine.n_predictive_windows)
+                     n_predictive_windows=engine.n_predictive_windows,
+                     n_switches=engine.residency.n_switches,
+                     actuation_seconds=engine.residency.actuation_seconds)
 
 
 # --------------------------------------------------------------------------
@@ -210,6 +218,9 @@ class ClusterResult:
     n_replicas: int                         # replicas that ever existed
     n_joins: int = 0
     n_predictive_windows: int = 0           # windows opened with no spare
+    # residency accounting, aggregated across every replica's tracker
+    n_switches: int = 0
+    actuation_seconds: float = 0.0
     # autoscaling accounting: per-replica active seconds (static runs
     # bill every replica for the whole duration) + the scale-event log
     replica_spans: Dict[int, float] = field(default_factory=dict)
@@ -247,7 +258,10 @@ class ClusterResult:
     def stats(self) -> Dict[str, float]:
         return cluster_summarize(self.queries, n_replicas=self.n_replicas,
                                  n_joins=self.n_joins,
-                                 replica_spans=self.replica_spans)
+                                 replica_spans=self.replica_spans,
+                                 n_switches=self.n_switches,
+                                 n_dispatches=len(self.dispatches),
+                                 actuation_seconds=self.actuation_seconds)
 
 
 def simulate_cluster(arrivals: Sequence[float], profile: LatencyProfile,
@@ -323,4 +337,8 @@ def simulate_cluster(arrivals: Sequence[float], profile: LatencyProfile,
                          n_predictive_windows=sum(e.n_predictive_windows
                                                   for e in coord.engines),
                          replica_spans=spans, scale_events=scale_events,
-                         forecast=coord.forecast_snapshot(duration))
+                         forecast=coord.forecast_snapshot(duration),
+                         n_switches=sum(e.residency.n_switches
+                                        for e in coord.engines),
+                         actuation_seconds=sum(e.residency.actuation_seconds
+                                               for e in coord.engines))

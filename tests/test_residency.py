@@ -1,0 +1,338 @@
+"""Residency layer (serving/residency.py): actuation cost model units,
+tracker bookkeeping + conservation properties, the byte-identical
+replay regression (residency-blind configs reproduce the pre-refactor
+inlined engine math bit-for-bit), the router/engine residency-agreement
+regression (the duplicated ``WorkerHandle.current_subnet`` can never
+come back), sticky-policy invariants, and actuation-aware placement
+semantics."""
+import asyncio
+import dataclasses
+import math
+
+import numpy as np
+from tests._hypothesis_compat import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.serving import cluster, policies, profiler, runtime, simulator, traces
+from repro.serving.engine import EngineConfig, SchedulingEngine
+from repro.serving.profiler import (RTX2080TI, SUBNETACT_ACTUATION_S,
+                                    loading_latency)
+from repro.serving.queue import Query
+from repro.serving.residency import (DEFAULT_WEIGHT_BYTES, ActuationModel,
+                                     ResidencyTracker)
+
+PROF = profiler.build_profile(get_config("ofa_resnet"))
+ARR = traces.bursty_trace(400, 1600, 4, 2.0, seed=23)
+
+
+class TestActuationModel:
+    def test_same_subnet_is_free(self):
+        m = ActuationModel(load_on_switch=True)
+        for pi in range(PROF.n_pareto):
+            assert m.switch_cost(PROF, pi, pi) == 0.0
+
+    def test_control_swap_costs_the_actuation_delay(self):
+        m = ActuationModel()
+        assert m.switch_cost(PROF, 0, 1) == SUBNETACT_ACTUATION_S
+        assert m.switch_cost(PROF, None, 1) == SUBNETACT_ACTUATION_S
+
+    def test_load_on_switch_adds_exact_weight_page_in(self):
+        m = ActuationModel(load_on_switch=True)
+        for pi in range(PROF.n_pareto):
+            wb = PROF.points[pi].weight_mb * 2**20
+            assert (m.switch_cost(PROF, None, pi)
+                    == SUBNETACT_ACTUATION_S + loading_latency(RTX2080TI, wb))
+
+    def test_pointless_profile_falls_back_to_legacy_bytes(self):
+        # measured profiles (profiler.measure_profile) carry no Pareto
+        # points; the historical engine assumed a 100 MB footprint
+        bare = dataclasses.replace(PROF, points=[])
+        m = ActuationModel(load_on_switch=True)
+        assert m.weight_bytes(bare, 0) == DEFAULT_WEIGHT_BYTES
+        assert (m.load_cost(bare, 0)
+                == loading_latency(RTX2080TI, DEFAULT_WEIGHT_BYTES))
+
+    def test_penalized_matches_sequential_accumulation_order(self):
+        # float addition is non-associative: the replay guarantee is
+        # that penalized() adds delay then load with sequential +=,
+        # exactly as the pre-refactor engine did
+        m = ActuationModel(load_on_switch=True)
+        for pi in range(PROF.n_pareto):
+            lat = float(PROF.lat[pi, 0])
+            expect = lat
+            expect += SUBNETACT_ACTUATION_S
+            expect += m.load_cost(PROF, pi)
+            assert m.penalized(lat, PROF, None, pi) == expect
+            assert m.penalized(lat, PROF, pi, pi) == lat
+
+    def test_cold_start_is_the_heaviest_subnet_load(self):
+        m = ActuationModel()
+        heaviest = max(p.weight_mb * 2**20 for p in PROF.points)
+        assert m.cold_start(PROF) == loading_latency(RTX2080TI, heaviest)
+        assert all(m.cold_start(PROF) >= m.load_cost(PROF, pi)
+                   for pi in range(PROF.n_pareto))
+
+    @given(st.floats(1e3, 1e9), st.floats(1e3, 1e9))
+    @settings(max_examples=40, deadline=None)
+    def test_load_cost_monotone_in_weight_bytes(self, b1, b2):
+        lo, hi = sorted((b1, b2))
+        assert (loading_latency(RTX2080TI, lo)
+                <= loading_latency(RTX2080TI, hi))
+
+
+class TestResidencyTracker:
+    def _tracker(self, n=3, load=False):
+        return ResidencyTracker(PROF, ActuationModel(load_on_switch=load),
+                                worker_ids=range(n))
+
+    def test_fresh_pool_is_unresident(self):
+        tr = self._tracker()
+        assert len(tr) == 3 and sorted(tr.workers()) == [0, 1, 2]
+        assert all(tr.resident(w) is None for w in tr.workers())
+        assert tr.switch_rate == 0.0
+
+    def test_actuate_commits_and_books_the_cost(self):
+        tr = self._tracker(load=True)
+        cost = tr.actuate(0, 2)
+        assert cost == tr.model.switch_cost(PROF, None, 2)
+        assert tr.resident(0) == 2
+        assert (tr.n_launches, tr.n_switches) == (1, 1)
+        assert tr.actuation_seconds == cost
+        # relaunching the resident subnet is free and not a switch
+        assert tr.actuate(0, 2) == 0.0
+        assert (tr.n_launches, tr.n_switches) == (2, 1)
+        assert tr.switch_rate == 0.5
+
+    def test_forget_drops_residency_with_the_worker(self):
+        tr = self._tracker()
+        tr.actuate(1, 0)
+        tr.forget(1)
+        assert 1 not in tr and len(tr) == 2
+        assert tr.resident(1) is None
+        # a re-registered worker starts cold again
+        tr.register(1)
+        assert tr.resident(1) is None
+
+    def test_min_switch_cost_zero_iff_resident_somewhere(self):
+        tr = self._tracker(load=True)
+        pi = 1
+        assert tr.min_switch_cost(pi) == tr.model.switch_cost(PROF, None, pi)
+        tr.actuate(2, pi)
+        assert tr.min_switch_cost(pi) == 0.0
+        assert tr.resident_count(pi) == 1
+
+    def test_empty_pool_prices_a_cold_worker(self):
+        tr = ResidencyTracker(PROF, ActuationModel(load_on_switch=True))
+        assert (tr.min_switch_cost(0)
+                == tr.model.switch_cost(PROF, None, 0))
+
+    def test_snapshot_is_finite_and_complete(self):
+        tr = self._tracker(load=True)
+        tr.actuate(0, 1)
+        snap = tr.snapshot()
+        assert set(snap) == {"n_workers", "n_launches", "n_switches",
+                             "switch_rate", "actuation_seconds"}
+        assert all(math.isfinite(v) and v >= 0 for v in snap.values())
+
+    @given(st.lists(st.tuples(st.sampled_from(["register", "forget",
+                                               "actuate"]),
+                              st.integers(0, 5), st.integers(0, 3)),
+                    min_size=1, max_size=60))
+    @settings(max_examples=60, deadline=None)
+    def test_residency_keys_conserved_under_any_op_sequence(self, ops):
+        """Tracker keys are exactly (registered - forgotten + actuated):
+        residency never leaks a dead worker or loses a live one, and
+        the accounting stays consistent under arbitrary fault/
+        decommission interleavings."""
+        tr = ResidencyTracker(PROF, ActuationModel(load_on_switch=True))
+        alive = set()
+        for op, wid, pi in ops:
+            if op == "register":
+                tr.register(wid)
+                alive.add(wid)
+            elif op == "forget":
+                tr.forget(wid)
+                alive.discard(wid)
+            else:
+                tr.actuate(wid, pi)     # engine launch: implies membership
+                alive.add(wid)
+                assert tr.resident(wid) == pi
+        assert set(tr.workers()) == alive
+        assert 0 <= tr.n_switches <= tr.n_launches
+        assert 0.0 <= tr.switch_rate <= 1.0
+        assert math.isfinite(tr.actuation_seconds)
+        assert tr.actuation_seconds >= 0.0
+
+
+class TestByteIdenticalReplay:
+    """THE refactor regression: with residency-blind configuration the
+    new layer must reproduce the pre-refactor inlined engine math
+    bit-for-bit. Reimplement the OLD code (sequential ``+=`` against a
+    hand-tracked worker->subnet dict) over the dispatch stream and
+    demand exact float equality in both actuation regimes."""
+
+    def _replay(self, load_on_switch):
+        scfg = simulator.SimConfig(n_workers=4, slo=0.036,
+                                   load_on_switch=load_on_switch)
+        res = simulator.simulate(ARR, PROF, policies.SlackFit(), scfg)
+        assert res.dispatches, "trace must exercise the engine"
+        worker_model = {}                      # the old private dict
+        for d in res.dispatches:
+            lat = PROF.latency(d.pareto_idx, max(d.batch, 1))
+            if worker_model.get(d.worker) != d.pareto_idx:
+                lat += SUBNETACT_ACTUATION_S   # old inlined actuation
+                if load_on_switch:
+                    wb = (PROF.points[d.pareto_idx].weight_mb * 2**20
+                          if PROF.points else 100e6)
+                    lat += loading_latency(RTX2080TI, wb)
+            worker_model[d.worker] = d.pareto_idx
+            assert lat == d.latency            # exact, not approx
+        return res
+
+    def test_control_swap_regime_replays_bit_for_bit(self):
+        self._replay(load_on_switch=False)
+
+    def test_weight_load_regime_replays_bit_for_bit(self):
+        res = self._replay(load_on_switch=True)
+        # and the booked accounting equals an independent walk
+        m = ActuationModel(load_on_switch=True)
+        resident, seconds = {}, 0.0
+        for d in res.dispatches:
+            seconds += m.switch_cost(PROF, resident.get(d.worker),
+                                     d.pareto_idx)
+            resident[d.worker] = d.pareto_idx
+        assert seconds == res.actuation_seconds
+
+
+class TestRouterResidencyAgreement:
+    """Satellite regression for the PR 3 duplication: the runtime layer
+    no longer keeps its own ``current_subnet`` copy, so the subnet a
+    worker ACTUALLY ran last can never disagree with what the engine's
+    residency tracker says it runs."""
+
+    def test_worker_handle_has_no_residency_copy(self):
+        wh = runtime.WorkerHandle(wid=0, run=lambda idx, p: np.zeros(len(p)))
+        assert not hasattr(wh, "current_subnet")
+
+    def test_router_observed_subnets_match_engine_residency(self):
+        observed = {}                      # wid -> last ACTUALLY-run subnet
+
+        def make_run(wid):
+            def run(idx, payloads):
+                observed[wid] = idx
+                return np.zeros(len(payloads))
+            return run
+
+        async def main():
+            workers = [runtime.WorkerHandle(wid=i, run=make_run(i))
+                       for i in range(3)]
+            router = runtime.Router(PROF, policies.SlackFit(), workers)
+            await router.start()
+            futs = [await router.submit(np.zeros(8), slo_s=0.5)
+                    for _ in range(30)]
+            await asyncio.gather(*futs)
+            await router.drain()
+            return router
+
+        router = asyncio.run(main())
+        assert observed, "router must have dispatched"
+        for wid, idx in observed.items():
+            assert router.resident_subnet(wid) == idx
+            assert router.engine.residency.resident(wid) == idx
+
+
+class TestStickySlackFit:
+    def _view(self, resident_pi):
+        tr = ResidencyTracker(PROF, ActuationModel(load_on_switch=True),
+                              worker_ids=(0,))
+        if resident_pi is not None:
+            tr.actuate(0, resident_pi)
+        return tr.view(0)
+
+    def test_residency_blind_call_is_plain_slackfit(self):
+        base, sticky = policies.SlackFit(), policies.StickySlackFit()
+        for slack in (1e-4, 1e-3, 1e-2, 0.036, 0.1, 1.0):
+            for qlen in (0, 1, 7, 50):
+                b = base.choose(PROF, slack, qlen)
+                s = sticky.choose(PROF, slack, qlen, residency=None)
+                assert (b is None) == (s is None)
+                if b is not None:
+                    assert (b.pareto_idx, b.batch_size) == \
+                        (s.pareto_idx, s.batch_size)
+
+    @given(st.floats(1e-4, 1.0), st.integers(0, 40),
+           st.integers(0, 1000))
+    @settings(max_examples=80, deadline=None)
+    def test_sticky_deviations_are_no_regret(self, slack, qlen, seed):
+        """Whenever sticky deviates from plain SlackFit it (a) returns
+        the resident subnet, (b) still meets the slack target, and
+        (c) only sacrifices accuracy when actuating SlackFit's choice
+        would itself blow the slack budget."""
+        rng = np.random.default_rng(seed)
+        resident = int(rng.integers(0, PROF.n_pareto))
+        view = self._view(resident)
+        base = policies.SlackFit().choose(PROF, slack, qlen)
+        dec = policies.StickySlackFit().choose(PROF, slack, qlen,
+                                               residency=view)
+        if base is None or dec is None:
+            assert (base is None) == (dec is None)
+            return
+        assert dec.batch_size == base.batch_size
+        if dec.pareto_idx == base.pareto_idx:
+            return
+        assert dec.pareto_idx == resident
+        bi = int(np.searchsorted(PROF.batches, base.batch_size))
+        assert PROF.lat[resident, bi] <= slack
+        base_with_switch = (float(PROF.lat[base.pareto_idx, bi])
+                            + view.switch_cost(base.pareto_idx))
+        assert (PROF.accs[resident] >= PROF.accs[base.pareto_idx]
+                or base_with_switch > slack)
+
+    def test_sticks_to_equal_accuracy_resident(self):
+        base = policies.SlackFit().choose(PROF, 0.036, 0)
+        assert base is not None
+        dec = policies.StickySlackFit().choose(
+            PROF, 0.036, 0, residency=self._view(base.pareto_idx))
+        assert dec.pareto_idx == base.pareto_idx   # free: already resident
+
+
+class TestActuationAwarePlacement:
+    def _engines(self, load=True):
+        cfg = EngineConfig(load_on_switch=load)
+        return [SchedulingEngine(PROF, policies.SlackFit(), cfg=cfg,
+                                 worker_ids=range(2), replica_id=rid)
+                for rid in range(2)]
+
+    def test_prefers_the_already_resident_replica(self):
+        engines = self._engines()
+        coord = cluster.ClusterCoordinator(engines, cluster.ActuationAware())
+        pi = engines[1].likely_subnet(0.036)
+        engines[1].residency.actuate(0, pi)    # replica 1 holds the subnet
+        assert coord.route(Query(deadline=0.036, seq=0, qid=1), 0.0) == 1
+
+    def test_spills_when_the_resident_replica_is_backed_up(self):
+        engines = self._engines()
+        pi = engines[0].likely_subnet(0.036)
+        engines[0].residency.actuate(0, pi)
+        # pile enough queue onto replica 0 that its projected start
+        # exceeds the page-in cost of actuating replica 1 from cold
+        switch = engines[1].projected_switch_cost(pi)
+        depth = 0
+        while (engines[0].projected_start(0.036, 0.0)
+               - engines[1].projected_start(0.036, 0.0)) <= switch:
+            engines[0].admit(Query(deadline=0.036, seq=0, qid=100 + depth))
+            depth += 1
+            assert depth < 10_000
+        coord = cluster.ClusterCoordinator(engines, cluster.ActuationAware())
+        assert coord.route(Query(deadline=0.036, seq=0, qid=1), 0.0) == 1
+
+    def test_registered_and_driven_by_simulator(self):
+        ccfg = simulator.ClusterConfig(
+            n_replicas=2, workers_per_replica=2,
+            placement="actuation_aware", slo=0.036, load_on_switch=True)
+        res = simulator.simulate_cluster(ARR, PROF,
+                                         policies.StickySlackFit(), ccfg)
+        assert len(res.queries) == len(ARR)
+        st_ = res.stats()
+        assert 0.0 <= st_["switch_rate"] <= 1.0
+        assert math.isfinite(st_["actuation_seconds"])

@@ -45,6 +45,7 @@ TEST_FILES = [
     "tests/test_policies.py",
     "tests/test_queue_properties.py",
     "tests/test_quantize.py",
+    "tests/test_residency.py",
     "tests/test_serving.py::TestTraces",
 ]
 PYTEST_ARGS = ["-k", "not Oracle"]
