@@ -1,12 +1,34 @@
-"""Shared benchmark plumbing: result persistence + table rendering."""
+"""Shared benchmark plumbing: result persistence, table rendering, and
+noise-resistant timing (warmup + median-of-k)."""
 from __future__ import annotations
 
 import json
 import math
 import os
-from typing import Any, Dict, List
+import statistics
+import time
+from typing import Any, Callable, Dict, List
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def time_fn(fn: Callable[[], Any], *, warmup: int = 2, iters: int = 5) -> float:
+    """Median-of-``iters`` wall seconds for ``fn()``, after ``warmup``
+    untimed calls (absorbs jit compilation and cache warm-up).
+
+    The median (not mean/min) is what ``tools/bench_diff.py`` tolerances
+    are written against: robust to a single preempted iteration without
+    hiding a real regression the way min does. ``fn`` must block on its
+    result (``jax.block_until_ready``) for the number to mean anything.
+    """
+    for _ in range(max(0, warmup)):
+        fn()
+    ts = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts)
 
 
 def save(name: str, payload: Dict[str, Any]) -> None:

@@ -22,15 +22,17 @@ Probed surfaces
 
 Kernel dispatch tiers
 ---------------------
-The Pallas kernels run through a three-tier fallback chain, resolved
+The Pallas kernels run through a four-tier fallback chain, resolved
 once per process (see :mod:`repro.kernels.dispatch`):
 
-    ``tpu``       — compiled Pallas kernels on a real TPU backend
-    ``interpret`` — the same kernels under the Pallas interpreter
-                    (CPU CI: validates kernel numerics without a TPU)
-    ``ref``       — the pure-jnp oracles in :mod:`repro.kernels.ref`
+    ``tpu``           — compiled Pallas kernels on a real TPU backend
+    ``pallas-triton`` — backend-agnostic Pallas kernels compiled via
+                        the Triton lowering on a GPU backend
+    ``interpret``     — the TPU kernels under the Pallas interpreter
+                        (CPU CI: validates kernel numerics without a TPU)
+    ``ref``           — the pure-jnp oracles in :mod:`repro.kernels.ref`
 
-Override with ``REPRO_KERNEL_TIER=tpu|interpret|ref`` or
+Override with ``REPRO_KERNEL_TIER=tpu|pallas-triton|interpret|ref`` or
 :func:`set_kernel_tier`.
 """
 from __future__ import annotations
@@ -44,9 +46,12 @@ __all__ = [
     "JAX_VERSION",
     "HAS_PALLAS",
     "HAS_PALLAS_TPU",
+    "HAS_PALLAS_TRITON",
     "KERNEL_TIERS",
     "backend",
     "is_tpu_backend",
+    "is_gpu_backend",
+    "triton_compiler_params_kwargs",
     "tpu_compiler_params",
     "compiler_params_kwargs",
     "make_abstract_mesh",
@@ -91,6 +96,13 @@ except Exception:  # pragma: no cover
     _pltpu = None
     HAS_PALLAS_TPU = False
 
+try:
+    from jax.experimental.pallas import triton as _pltriton
+    HAS_PALLAS_TRITON = True
+except Exception:  # pragma: no cover - absent on some builds
+    _pltriton = None
+    HAS_PALLAS_TRITON = False
+
 # The compiler-params dataclass was renamed TPUCompilerParams ->
 # CompilerParams across Pallas releases; accept either.
 _COMPILER_PARAMS_CLS = None
@@ -126,6 +138,31 @@ def compiler_params_kwargs(**kwargs) -> dict:
     """``{"compiler_params": ...}`` for pallas_call, or ``{}``."""
     params = tpu_compiler_params(**kwargs)
     return {"compiler_params": params} if params is not None else {}
+
+
+def triton_compiler_params_kwargs(**kwargs) -> dict:
+    """``{"compiler_params": TritonCompilerParams(...)}`` or ``{}``.
+
+    Unknown fields are dropped (the dataclass gained/lost fields across
+    releases); with no Triton module or no surviving fields the kwarg
+    vanishes entirely, which is also the right thing under interpret
+    mode where compiler params are ignored anyway.
+    """
+    if _pltriton is None:
+        return {}
+    cls = getattr(_pltriton, "TritonCompilerParams", None) or \
+        getattr(_pltriton, "CompilerParams", None)
+    if cls is None:
+        return {}
+    fields = getattr(cls, "__dataclass_fields__", None)
+    if fields is not None:
+        kwargs = {k: v for k, v in kwargs.items() if k in fields}
+        if not kwargs:
+            return {}
+    try:
+        return {"compiler_params": cls(**kwargs)}
+    except TypeError:
+        return {}
 
 
 # --------------------------------------------------------------------------
@@ -184,7 +221,7 @@ def cost_analysis(compiled) -> dict:
 # Backend capability + kernel tier resolution
 # --------------------------------------------------------------------------
 
-KERNEL_TIERS = ("tpu", "interpret", "ref")
+KERNEL_TIERS = ("tpu", "pallas-triton", "interpret", "ref")
 _TIER_ENV = "REPRO_KERNEL_TIER"
 _tier_cache: Optional[str] = None
 _explicit_tier: Optional[str] = None
@@ -215,6 +252,12 @@ def cpu_subprocess_env(**extra) -> dict:
 
 def is_tpu_backend() -> bool:
     return backend() == "tpu"
+
+
+def is_gpu_backend() -> bool:
+    # jax.default_backend() says "gpu" on most releases but the platform
+    # name underneath is cuda/rocm; accept any of them.
+    return backend() in ("gpu", "cuda", "rocm")
 
 
 def pallas_interpret_works() -> bool:
@@ -255,6 +298,8 @@ def tier_available(tier: str) -> bool:
     """Whether a dispatch tier can actually execute on this host."""
     if tier == "tpu":
         return HAS_PALLAS_TPU and is_tpu_backend()
+    if tier == "pallas-triton":
+        return HAS_PALLAS_TRITON and is_gpu_backend()
     if tier == "interpret":
         # the interpret-tier kernels use pltpu grid specs, so the plain
         # pallas probe alone is not sufficient

@@ -2,14 +2,17 @@
 
 One registry maps each kernel name to its implementations per tier:
 
-    ``tpu``       — compiled Pallas kernel (TPU backend attached)
-    ``interpret`` — the same Pallas kernel under the interpreter
-                    (CPU hosts: validates kernel numerics, slowly)
-    ``ref``       — the pure-jnp oracle from :mod:`repro.kernels.ref`
+    ``tpu``           — compiled Pallas kernel (TPU backend attached)
+    ``pallas-triton`` — backend-agnostic Pallas kernel lowered through
+                        Triton (GPU backend attached)
+    ``interpret``     — the TPU Pallas kernel under the interpreter
+                        (CPU hosts: validates kernel numerics, slowly)
+    ``ref``           — the pure-jnp oracle from :mod:`repro.kernels.ref`
 
 The process tier is resolved once by :func:`repro.compat.kernel_tier`
-(``tpu -> interpret -> ref`` fallback chain, overridable via the
-``REPRO_KERNEL_TIER`` env var or :func:`repro.compat.set_kernel_tier`).
+(``tpu -> pallas-triton -> interpret -> ref`` fallback chain,
+overridable via the ``REPRO_KERNEL_TIER`` env var or
+:func:`repro.compat.set_kernel_tier`).
 A kernel that lacks an implementation at the process tier falls through
 to the next tier down the chain, so registering a new backend or kernel
 variant is a one-file change: implement + register, and every call site
@@ -96,10 +99,15 @@ def coerce_tier(tier: Optional[str], interpret: Optional[bool]) -> Optional[str]
 def model_tier() -> str:
     """Dispatch tier for model hot paths (forward/decode under jit).
 
-    Explicit override (env/config) wins; otherwise ``tpu`` when
-    available, else ``ref`` — never a probed ``interpret``.
+    Explicit override (env/config) wins — honored verbatim, even for
+    ``pallas-triton``; otherwise the fastest *compiled* tier available
+    on this host (``tpu``, then ``pallas-triton``), else ``ref`` —
+    never a probed ``interpret``.
     """
     explicit = compat.explicit_kernel_tier()
     if explicit is not None:
         return explicit
-    return "tpu" if compat.tier_available("tpu") else "ref"
+    for tier in ("tpu", "pallas-triton"):
+        if compat.tier_available(tier):
+            return tier
+    return "ref"

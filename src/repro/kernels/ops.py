@@ -1,15 +1,17 @@
-"""Public kernel entry points, routed through the three-tier dispatcher.
+"""Public kernel entry points, routed through the four-tier dispatcher.
 
 Every kernel resolves to one of the tiers registered in
-:mod:`repro.kernels.dispatch` — ``tpu`` (compiled Pallas), ``interpret``
-(Pallas interpreter; CPU numerics validation), ``ref`` (pure-jnp oracle
-from :mod:`repro.kernels.ref`). The process default comes from
+:mod:`repro.kernels.dispatch` — ``tpu`` (compiled Pallas),
+``pallas-triton`` (backend-agnostic Pallas lowered through Triton on
+GPU), ``interpret`` (Pallas interpreter; CPU numerics validation),
+``ref`` (pure-jnp from :mod:`repro.kernels.ref`, block-skipping for the
+attention kernels). The process default comes from
 :func:`repro.compat.kernel_tier`; per-call overrides take ``tier=`` (or
 the legacy ``interpret=`` bool, mapped to ``interpret``/``tpu``).
 
-The Pallas implementations are only imported when the Pallas TPU module
-itself imports — on a JAX build without it, every kernel still works at
-the ``ref`` tier.
+The Pallas implementations are only imported when the corresponding
+Pallas module itself imports — on a JAX build without it, every kernel
+still works at the ``ref`` tier.
 """
 from __future__ import annotations
 
@@ -67,15 +69,36 @@ if compat.HAS_PALLAS_TPU:
                                interpret=True)
 
 
+if compat.HAS_PALLAS_TRITON and compat.HAS_PALLAS:
+    from repro.kernels import triton_kernels as _triton
+
+    @register("flash_attention", "pallas-triton")
+    def _flash_triton(q, k, v, *, causal, window, kv_len, q_block, kv_block):
+        return _triton.flash_attention(q, k, v, causal=causal, window=window,
+                                       kv_len=kv_len, q_block=q_block,
+                                       kv_block=kv_block)
+
+    @register("sliced_matmul", "pallas-triton")
+    def _sliced_triton(x, w, active_in, active_out, *, bm, bk, bn):
+        return _triton.sliced_matmul(x, w, active_in, active_out, bm=bm,
+                                     bk=bk, bn=bn)
+
+    @register("subnet_rmsnorm", "pallas-triton")
+    def _rmsnorm_triton(x, gamma_table, subnet_id, *, eps):
+        return _triton.subnet_rmsnorm(x, gamma_table, subnet_id, eps=eps)
+
+
 @register("flash_attention", "ref")
-def _flash_ref(q, k, v, *, causal, window, kv_len, q_block=0, kv_block=0):
+def _flash_ref(q, k, v, *, causal, window, kv_len, q_block=256, kv_block=256):
     return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
-                                   kv_len=kv_len)
+                                   kv_len=kv_len, q_block=q_block,
+                                   kv_block=kv_block)
 
 
 @register("decode_attention", "ref")
-def _decode_ref(q, k_cache, v_cache, index, *, window, kv_block=0):
-    return ref.decode_attention_ref(q, k_cache, v_cache, index, window=window)
+def _decode_ref(q, k_cache, v_cache, index, *, window, kv_block=256):
+    return ref.decode_attention_ref(q, k_cache, v_cache, index,
+                                    window=window, kv_block=kv_block)
 
 
 @register("sliced_matmul", "ref")
@@ -130,33 +153,47 @@ def subnet_rmsnorm(x, gamma_table, subnet_id, *, eps=1e-5, tier=None,
 # --------------------------------------------------------------------------
 
 
+def _tier_registered(name: str, tier: str) -> bool:
+    return tier in DISPATCHER.registered_tiers(name)
+
+
 def model_flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
                           kv_len=None, q_block=512, kv_block=512, scale=None):
     """Full-sequence attention for model forward passes.
 
-    Pallas kernel when the model tier says so; the blockwise-scan XLA
-    path from :mod:`repro.models.attention` otherwise (same math,
-    asserted equal by the kernel tests). The Pallas kernel does not
-    take ``q_offset``/``scale`` — calls using them route to the XLA
-    path on every tier rather than silently dropping the arguments.
+    Pallas kernel (TPU or pallas-triton) when the model tier says so;
+    the block-skipping XLA path from :mod:`repro.models.attention`
+    otherwise (same math, asserted equal by the kernel tests). The
+    Pallas kernels do not take ``q_offset``/``scale`` — calls using
+    them route to the XLA path on every tier rather than silently
+    dropping the arguments. ``q_block``/``kv_block`` plumb through to
+    whichever tier serves the call.
     """
     tier = model_tier()
     pallas_ok = isinstance(q_offset, int) and q_offset == 0 and scale is None
-    if pallas_ok and tier in ("tpu", "interpret"):
+    if pallas_ok and tier != "ref" and _tier_registered("flash_attention",
+                                                        tier):
         return flash_attention(q, k, v, causal=causal, window=window,
-                               kv_len=kv_len, tier=tier)
+                               kv_len=kv_len, q_block=q_block,
+                               kv_block=kv_block, tier=tier)
     from repro.models.attention import flash_attention as xla_flash
     return xla_flash(q, k, v, causal=causal, window=window, q_offset=q_offset,
                      kv_len=kv_len, q_block=q_block, kv_block=kv_block,
                      scale=scale)
 
 
-def model_decode_attention(q, k_cache, v_cache, *, index, window=0):
-    """Single-token cached decode for model decode steps."""
+def model_decode_attention(q, k_cache, v_cache, *, index, window=0,
+                           kv_block=512):
+    """Single-token cached decode for model decode steps.
+
+    ``pallas-triton`` registers no decode kernel (the GPU tier covers
+    the three hot prefill-path kernels); a tier with no registration
+    falls to the XLA path rather than erroring.
+    """
     tier = model_tier()
-    if tier in ("tpu", "interpret"):
+    if tier != "ref" and _tier_registered("decode_attention", tier):
         return decode_attention(q, k_cache, v_cache, index, window=window,
-                                tier=tier)
+                                kv_block=kv_block, tier=tier)
     from repro.models.attention import decode_attention as xla_decode
     return xla_decode(q, k_cache, v_cache, index=index, window=window)
 
@@ -164,13 +201,16 @@ def model_decode_attention(q, k_cache, v_cache, *, index, window=0):
 def model_subnet_rmsnorm(x, gamma_table, subnet_id, *, eps=1e-5):
     """SubnetNorm (RMS flavor) for model blocks; None = use XLA path."""
     tier = model_tier()
-    if tier in ("tpu", "interpret"):
+    if tier != "ref" and _tier_registered("subnet_rmsnorm", tier):
         return subnet_rmsnorm(x, gamma_table, subnet_id, eps=eps, tier=tier)
     return None
 
 
-# references re-exported for tests
+# references re-exported for tests (the *_dense_ref pair are the
+# mathematical oracles; the plain *_ref pair block-skip)
 flash_attention_ref = ref.flash_attention_ref
+flash_attention_dense_ref = ref.flash_attention_dense_ref
 decode_attention_ref = ref.decode_attention_ref
+decode_attention_dense_ref = ref.decode_attention_dense_ref
 sliced_matmul_ref = ref.sliced_matmul_ref
 subnet_rmsnorm_ref = ref.subnet_rmsnorm_ref

@@ -1,0 +1,249 @@
+"""GPU (``pallas-triton``) tier kernels: flash attention, sliced
+matmul, subnet RMSNorm.
+
+Unlike the TPU kernels these use only backend-agnostic Pallas surfaces
+(plain ``pl.BlockSpec`` grids, ``pl.load`` with dynamic slices, carried
+``fori_loop`` accumulators — no ``pltpu`` grid specs or VMEM scratch),
+so the very same kernel bodies compile through the Triton lowering on a
+GPU backend *and* run under the Pallas interpreter on CPU, which is how
+CI validates their numerics without a GPU (tests/test_dispatch.py).
+
+Scalars that steer the TPU kernels via scalar prefetch (valid kv
+length, active widths, subnet id) arrive here as tiny array inputs with
+a grid-invariant BlockSpec — the GPU pipeline has no scalar-prefetch
+lane, but a (1,)-int32 load per program is free.
+
+Block-liveness mirrors :mod:`repro.kernels.flash_attention`: the kv
+loop of each q block runs only over blocks inside the causal frontier
+and the sliding window, so prefill cost tracks the ~S^2/2 causal
+triangle (and the O(S * window) band with windows) rather than S^2.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro import compat
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# flash attention (prefill)
+# --------------------------------------------------------------------------
+
+
+def _flash_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, *, qb: int, kb: int,
+                  nk: int, causal: bool, window: int, scale: float):
+    qi = pl.program_id(1)
+    kv_len = lens_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)                     # (qb, d)
+    q_pos = qi * qb + jnp.arange(qb, dtype=jnp.int32)
+
+    # live kv-block range for this q block (the Pallas-TPU liveness
+    # logic, computed per-program since program ids are traced here)
+    lo = jnp.int32(0)
+    hi = jnp.int32(nk)
+    hi = jnp.minimum(hi, lax.div(kv_len + kb - 1, kb))
+    if causal:
+        hi = jnp.minimum(hi, lax.div(q_pos[-1], kb) + 1)
+    if window:
+        lo = jnp.maximum(lo, lax.div(q_pos[0] - window + 1, kb))
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k0 = ki * kb
+        # int32 leading indexers, not python ints: the interpret-mode
+        # discharge rule only accepts traced scalars or slices
+        zero = jnp.int32(0)
+        kblk = pl.load(k_ref, (zero, zero, pl.dslice(k0, kb),
+                               slice(None))).astype(jnp.float32)
+        vblk = pl.load(v_ref, (zero, zero, pl.dslice(k0, kb),
+                               slice(None))).astype(jnp.float32)
+        s = jnp.dot(q, kblk.T, preferred_element_type=jnp.float32) * scale
+        k_pos = k0 + jnp.arange(kb, dtype=jnp.int32)
+        mask = k_pos[None, :] < kv_len
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[:, None]) * mask   # fully-dead rows -> 0
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[:, None] + jnp.dot(
+            p, vblk, preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    d = q.shape[-1]
+    m0 = jnp.full((qb,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((qb,), jnp.float32)
+    a0 = jnp.zeros((qb, d), jnp.float32)
+    m, l, acc = lax.fori_loop(lo, hi, body, (m0, l0, a0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_block", "kv_block", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    kv_len=None, q_block: int = 128, kv_block: int = 128,
+                    scale=None, interpret: bool = False):
+    """q: (B, Hq, Sq, d); k/v: (B, Hkv, Sk, d) -> (B, Hq, Sq, d)."""
+    B, Hq, Sq, d = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+
+    qb, kb = min(q_block, Sq), min(kv_block, Sk)
+    pq, pk = (-Sq) % qb, (-Sk) % kb
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    Sqp, Skp = Sq + pq, Sk + pk
+    nq, nk = Sqp // qb, Skp // kb
+
+    lens = jnp.array([Sk if kv_len is None else kv_len], jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, qb=qb, kb=kb, nk=nk, causal=causal,
+                          window=window, scale=scale),
+        grid=(B * Hq, nq),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, qi: (0,)),
+            pl.BlockSpec((1, 1, qb, d),
+                         lambda bh, qi: (bh // Hq, bh % Hq, qi, 0)),
+            pl.BlockSpec((1, 1, Skp, d),
+                         lambda bh, qi: (bh // Hq, (bh % Hq) // G, 0, 0)),
+            pl.BlockSpec((1, 1, Skp, d),
+                         lambda bh, qi: (bh // Hq, (bh % Hq) // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, d),
+                               lambda bh, qi: (bh // Hq, bh % Hq, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sqp, d), v.dtype),
+        interpret=interpret,
+        **({} if interpret else
+           compat.triton_compiler_params_kwargs(num_warps=4, num_stages=2)),
+    )(lens, q, k, v)
+    return out[:, :, :Sq]
+
+
+# --------------------------------------------------------------------------
+# sliced matmul (WeightSlice)
+# --------------------------------------------------------------------------
+
+
+def _sliced_kernel(nact_ref, x_ref, w_ref, o_ref, *, bk: int):
+    ni = pl.program_id(1)
+    k_act, n_act = nact_ref[0], nact_ref[1]
+    bm, bn = o_ref.shape
+
+    def body(ki, acc):
+        xb = pl.load(x_ref, (slice(None),
+                             pl.dslice(ki * bk, bk))).astype(jnp.float32)
+        wb = pl.load(w_ref, (pl.dslice(ki * bk, bk),
+                             slice(None))).astype(jnp.float32)
+        return acc + jnp.dot(xb, wb, preferred_element_type=jnp.float32)
+
+    # inactive N blocks skip the whole K loop, not just the store
+    hi = jnp.where(ni < n_act, k_act, 0)
+    acc = lax.fori_loop(0, hi, body, jnp.zeros((bm, bn), jnp.float32))
+    o_ref[...] = jnp.where(ni < n_act, acc, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def sliced_matmul(x, w, active_in, active_out, *, bm: int = 64, bk: int = 64,
+                  bn: int = 64, interpret: bool = False):
+    """y[..., :active_out] = x[..., :active_in] @ w[:active_in, :active_out]."""
+    orig_shape = x.shape
+    M = 1
+    for s in orig_shape[:-1]:
+        M *= s
+    K = x.shape[-1]
+    N = w.shape[1]
+    x2 = x.reshape(M, K)
+
+    pm, pk, pn = (-M) % bm, (-K) % bk, (-N) % bn
+    if pm or pk:
+        x2 = jnp.pad(x2, ((0, pm), (0, pk)))
+    wp = jnp.pad(w, ((0, pk), (0, pn))) if (pk or pn) else w
+    Mp, Kp, Np = x2.shape[0], x2.shape[1], wp.shape[1]
+
+    # zero channels beyond active_in so the boundary K block is exact
+    x2 = x2 * (lax.iota(jnp.int32, Kp)[None, :] < active_in).astype(x2.dtype)
+
+    nact = jnp.stack([
+        lax.div(active_in + bk - 1, bk).astype(jnp.int32),
+        lax.div(active_out + bn - 1, bn).astype(jnp.int32),
+    ])
+
+    out = pl.pallas_call(
+        functools.partial(_sliced_kernel, bk=bk),
+        grid=(Mp // bm, Np // bn),
+        in_specs=[
+            pl.BlockSpec((2,), lambda m, n: (0,)),
+            pl.BlockSpec((bm, Kp), lambda m, n: (m, 0)),
+            pl.BlockSpec((Kp, bn), lambda m, n: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        interpret=interpret,
+        **({} if interpret else
+           compat.triton_compiler_params_kwargs(num_warps=4, num_stages=3)),
+    )(nact, x2, wp)
+    out = out[:M, :N]
+    out = out * (lax.iota(jnp.int32, N)[None, :] < active_out).astype(out.dtype)
+    return out.reshape(*orig_shape[:-1], N)
+
+
+# --------------------------------------------------------------------------
+# subnet RMSNorm (SubnetNorm)
+# --------------------------------------------------------------------------
+
+
+def _rmsnorm_kernel(sid_ref, x_ref, g_ref, o_ref, *, eps: float):
+    sid = sid_ref[0]
+    g = pl.load(g_ref, (pl.dslice(sid, 1), slice(None))).astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * lax.rsqrt(var + eps) * g).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "eps", "interpret"))
+def subnet_rmsnorm(x, gamma_table, subnet_id, *, bm: int = 128,
+                   eps: float = 1e-5, interpret: bool = False):
+    """x: (..., d); gamma_table: (n_subnets, d); subnet_id: traced int32."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    M = 1
+    for s in orig_shape[:-1]:
+        M *= s
+    x2 = x.reshape(M, d)
+    bm_eff = min(bm, M)
+    pm = (-M) % bm_eff
+    if pm:
+        x2 = jnp.pad(x2, ((0, pm), (0, 0)))
+    S = gamma_table.shape[0]
+    sid = jnp.asarray(subnet_id, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=((M + pm) // bm_eff,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bm_eff, d), lambda i: (i, 0)),
+            pl.BlockSpec((S, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm_eff, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M + pm, d), x.dtype),
+        interpret=interpret,
+        **({} if interpret else
+           compat.triton_compiler_params_kwargs(num_warps=4)),
+    )(sid, x2, gamma_table)
+    return out[:M].reshape(orig_shape)

@@ -75,22 +75,27 @@ def apply_rope(x, positions, theta: float, rotary_pct: float = 1.0,
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     q_offset=0, kv_len=None, q_block: int = 512,
                     kv_block: int = 512, scale: Optional[float] = None):
-    """Online-softmax blockwise attention.
+    """Block-skipping online-softmax attention.
 
     q: (B, Hq, Sq, hd); k/v: (B, Hkv, Sk, hd) with Hq % Hkv == 0.
     ``q_offset``: absolute position of q[0] (decode/chunked prefill).
     ``kv_len``: traced valid KV length (cache); None = all of Sk.
     ``window``: sliding-window size (0 = full).
-    Memory: O(Sq_block * Sk_block); compute masked full-causal (the
-    perf pass can switch to block-skipping).
+    Memory: O(Sq_block * Sk_block). Each q block's kv scan covers only
+    the blocks inside its causal frontier and sliding window (the same
+    liveness logic as the Pallas kernel), so causal prefill tracks the
+    ~S^2/2 triangle rather than S^2 — a dead block's softmax mass is
+    exactly zero, so skipping is numerics-preserving. The static
+    skipping needs a Python-int ``q_offset``; a traced offset keeps the
+    full masked scan.
     """
     B, Hq, Sq, hd = q.shape
     _, Hkv, Sk, _ = k.shape
     G = Hq // Hkv
     scale = scale if scale is not None else hd ** -0.5
 
-    qb = min(q_block, Sq)
-    kb = min(kv_block, Sk)
+    qb = min(q_block, Sq) if q_block else Sq
+    kb = min(kv_block, Sk) if kv_block else Sk
     n_q, n_k = -(-Sq // qb), -(-Sk // kb)
     pad_q, pad_k = n_q * qb - Sq, n_k * kb - Sk
     if pad_q:
@@ -106,10 +111,9 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     q_pos = q_offset + lax.iota(jnp.int32, n_q * qb).reshape(n_q, qb)
     k_pos = lax.iota(jnp.int32, n_k * kb).reshape(n_k, kb)
     valid_k = jnp.asarray(Sk if kv_len is None else kv_len, jnp.int32)
+    off_static = q_offset if isinstance(q_offset, int) else None
 
-    def q_step(_, qi):
-        qblk, qp = qi                                  # (B,Hkv,G,qb,hd), (qb,)
-
+    def q_step(qblk, qp, lo: int, hi: int):
         def kv_step(carry, ki):
             m, l, acc = carry
             kblk, vblk, kp = ki
@@ -121,7 +125,8 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                 mask &= kp[None, :] > qp[:, None] - window
             s = jnp.where(mask[None, None, None], s, NEG_INF)
             m_new = jnp.maximum(m, s.max(axis=-1))
-            p = jnp.exp(s - m_new[..., None])
+            # mask again: fully-dead rows would otherwise get exp(0)=1
+            p = jnp.exp(s - m_new[..., None]) * mask[None, None, None]
             corr = jnp.exp(m - m_new)
             l = l * corr + p.sum(axis=-1)
             acc = acc * corr[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vblk)
@@ -132,12 +137,26 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         a0 = jnp.zeros((B, Hkv, G, qb, hd), jnp.float32)
         (m, l, acc), _ = lax.scan(
             kv_step, (m0, l0, a0),
-            (jnp.moveaxis(kr, 2, 0), jnp.moveaxis(vr, 2, 0), k_pos))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
-        return None, out
+            (jnp.moveaxis(kr[:, :, lo:hi], 2, 0),
+             jnp.moveaxis(vr[:, :, lo:hi], 2, 0), k_pos[lo:hi]))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
 
-    _, out = lax.scan(q_step, None, (jnp.moveaxis(qr, 3, 0), q_pos))
-    out = jnp.moveaxis(out, 0, 3).reshape(B, Hq, n_q * qb, hd)
+    outs = []
+    for qi in range(n_q):
+        lo, hi = 0, n_k
+        if off_static is not None:
+            q0 = off_static + qi * qb
+            if causal:
+                hi = min(hi, (q0 + qb - 1) // kb + 1)
+            if window:
+                lo = min(max(lo, (q0 - window + 1) // kb), n_k)
+            if isinstance(kv_len, int):
+                hi = min(hi, -(-kv_len // kb))
+        if hi <= lo:       # every key dead for this q block
+            outs.append(jnp.zeros((B, Hkv, G, qb, hd), jnp.float32))
+        else:
+            outs.append(q_step(qr[:, :, :, qi], q_pos[qi], lo, hi))
+    out = jnp.stack(outs, axis=3).reshape(B, Hq, n_q * qb, hd)
     return out[:, :, :Sq].astype(v.dtype)
 
 
@@ -225,15 +244,20 @@ def head_mask(cfg: ArchConfig, o, head_width):
 
 
 def attention_block(p, cfg: ArchConfig, x, ctrl, positions, *,
-                    slice_mode: str = "mask", attn_impl=None):
+                    slice_mode: str = "mask", attn_impl=None,
+                    q_block: int = 512, kv_block: int = 512):
     """Full-sequence attention with pre-norm. x: (B,S,d) -> (B,S,d).
 
     ``attn_impl=None`` resolves through the kernel dispatcher (Pallas on
-    TPU, the XLA blockwise path otherwise); pass an impl explicitly to
-    pin a tier (tests, benchmarks).
+    TPU, the XLA blockwise path otherwise), with ``q_block``/``kv_block``
+    plumbed through to whichever tier serves the call; pass an impl
+    explicitly to pin a tier (tests, benchmarks) — the block sizes only
+    bind to the dispatcher default, since a pinned impl chooses its own.
     """
     if attn_impl is None:
-        from repro.kernels.ops import model_flash_attention as attn_impl
+        from repro.kernels.ops import model_flash_attention
+        attn_impl = partial(model_flash_attention, q_block=q_block,
+                            kv_block=kv_block)
     h = ops.subnet_norm(x, p["norm_gamma"], ctrl["subnet_id"],
                         beta_table=p.get("norm_beta"), eps=cfg.norm_eps, kind=cfg.norm)
     q, k, v = _project_qkv(p, cfg, h, positions)
@@ -280,12 +304,16 @@ def attention_block(p, cfg: ArchConfig, x, ctrl, positions, *,
 
 
 def attention_decode(p, cfg: ArchConfig, x, ctrl, cache, index, *,
-                     slice_mode: str = "mask", decode_impl=None):
+                     slice_mode: str = "mask", decode_impl=None,
+                     kv_block: int = 512):
     """One-token decode. x: (B,1,d); cache: {'k','v'}: (B,Hkv,Smax,hd).
 
-    ``decode_impl=None`` resolves through the kernel dispatcher."""
+    ``decode_impl=None`` resolves through the kernel dispatcher;
+    ``kv_block`` (cache chunk for block-skipping tiers) binds only to
+    the dispatcher default."""
     if decode_impl is None:
-        from repro.kernels.ops import model_decode_attention as decode_impl
+        from repro.kernels.ops import model_decode_attention
+        decode_impl = partial(model_decode_attention, kv_block=kv_block)
     h = ops.subnet_norm(x, p["norm_gamma"], ctrl["subnet_id"],
                         beta_table=p.get("norm_beta"), eps=cfg.norm_eps, kind=cfg.norm)
     B = x.shape[0]

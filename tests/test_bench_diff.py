@@ -1,0 +1,151 @@
+"""tools/bench_diff.py: the perf-regression gate must actually gate.
+
+Covers the acceptance matrix: identical artifacts pass, an injected
+timing regression fails, an improvement passes (and is reported), a
+flipped claim fails, ``--skip-timing`` skips exactly the timing-kind
+metrics while still gating structural ones, and missing files/keys warn
+rather than fail (partial runs stay usable).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+import bench_diff  # noqa: E402
+
+BASE = {
+    "bench": "hotpath",
+    "claims": {"skip_matches_dense": True, "speedup_ge_2x": True},
+    "scalars": {
+        "prefill.S2048.skip_ms": 100.0,
+        "prefill.S2048.speedup": 2.5,
+        "prefill.S2048.live_frac": 0.5625,
+        "engine.n_queries": 1000.0,
+    },
+}
+
+TOL = {
+    "default": {"kind": "timing", "direction": "both", "rel_tol": 0.5},
+    "metrics": [
+        {"pattern": "*.skip_ms", "kind": "timing", "direction": "lower",
+         "rel_tol": 0.3},
+        {"pattern": "*.speedup", "kind": "timing", "direction": "higher",
+         "rel_tol": 0.2},
+        {"pattern": "*.live_frac", "kind": "structural",
+         "direction": "lower", "rel_tol": 0.0, "abs_tol": 1e-9},
+        {"pattern": "*.n_queries", "kind": "structural", "direction": "both",
+         "rel_tol": 0.0, "abs_tol": 0.0},
+    ],
+}
+
+
+def _setup(tmp_path, cur_mutate=None, base=BASE):
+    bdir = tmp_path / "baseline"
+    cdir = tmp_path / "current"
+    bdir.mkdir(exist_ok=True)
+    cdir.mkdir(exist_ok=True)
+    (bdir / "BENCH_hotpath.json").write_text(json.dumps(base))
+    (bdir / "tolerances.json").write_text(json.dumps(TOL))
+    cur = json.loads(json.dumps(base))
+    if cur_mutate:
+        cur_mutate(cur)
+    (cdir / "BENCH_hotpath.json").write_text(json.dumps(cur))
+    return str(bdir), str(cdir)
+
+
+def _run(bdir, cdir, *extra):
+    return bench_diff.main(["--baseline", bdir, "--current", cdir, *extra])
+
+
+def test_identical_passes(tmp_path):
+    bdir, cdir = _setup(tmp_path)
+    assert _run(bdir, cdir) == 0
+
+
+def test_injected_timing_regression_fails(tmp_path):
+    def worse(cur):
+        cur["scalars"]["prefill.S2048.skip_ms"] = 150.0   # +50% > 30% band
+    bdir, cdir = _setup(tmp_path, worse)
+    assert _run(bdir, cdir) == 1
+
+
+def test_improvement_passes(tmp_path):
+    def better(cur):
+        cur["scalars"]["prefill.S2048.skip_ms"] = 50.0
+        cur["scalars"]["prefill.S2048.speedup"] = 5.0
+    bdir, cdir = _setup(tmp_path, better)
+    assert _run(bdir, cdir) == 0
+
+
+def test_within_tolerance_passes(tmp_path):
+    def noisy(cur):
+        cur["scalars"]["prefill.S2048.skip_ms"] = 120.0   # +20% < 30% band
+    bdir, cdir = _setup(tmp_path, noisy)
+    assert _run(bdir, cdir) == 0
+
+
+def test_claim_flip_fails_even_with_skip_timing(tmp_path):
+    def flip(cur):
+        cur["claims"]["skip_matches_dense"] = False
+    bdir, cdir = _setup(tmp_path, flip)
+    assert _run(bdir, cdir) == 1
+    assert _run(bdir, cdir, "--skip-timing") == 1
+
+
+def test_skip_timing_skips_timing_but_gates_structural(tmp_path):
+    def mixed(cur):
+        cur["scalars"]["prefill.S2048.skip_ms"] = 900.0       # timing
+        cur["scalars"]["prefill.S2048.live_frac"] = 0.9       # structural
+    bdir, cdir = _setup(tmp_path, mixed)
+    assert _run(bdir, cdir) == 1
+    # structural regression still caught with timing skipped
+    assert _run(bdir, cdir, "--skip-timing") == 1
+
+    def timing_only(cur):
+        cur["scalars"]["prefill.S2048.skip_ms"] = 900.0
+    bdir, cdir = _setup(tmp_path, timing_only)
+    assert _run(bdir, cdir) == 1
+    assert _run(bdir, cdir, "--skip-timing") == 0
+
+
+def test_structural_equality_is_exact(tmp_path):
+    def drift(cur):
+        cur["scalars"]["engine.n_queries"] = 1001.0
+    bdir, cdir = _setup(tmp_path, drift)
+    assert _run(bdir, cdir) == 1
+
+
+def test_missing_current_key_warns_not_fails(tmp_path):
+    def drop(cur):
+        del cur["scalars"]["prefill.S2048.speedup"]
+        del cur["claims"]["speedup_ge_2x"]                # smoke omits it
+    bdir, cdir = _setup(tmp_path, drop)
+    assert _run(bdir, cdir) == 0
+
+
+def test_missing_current_file_warns_not_fails(tmp_path):
+    bdir, cdir = _setup(tmp_path)
+    os.remove(os.path.join(cdir, "BENCH_hotpath.json"))
+    assert _run(bdir, cdir) == 0
+
+
+def test_empty_baseline_dir_is_config_error(tmp_path):
+    bdir = tmp_path / "empty"
+    bdir.mkdir()
+    assert bench_diff.main(["--baseline", str(bdir),
+                            "--current", str(tmp_path)]) == 2
+
+
+def test_report_written(tmp_path):
+    def worse(cur):
+        cur["scalars"]["prefill.S2048.speedup"] = 1.0
+    bdir, cdir = _setup(tmp_path, worse)
+    report = tmp_path / "report.json"
+    assert _run(bdir, cdir, "--report", str(report)) == 1
+    data = json.loads(report.read_text())
+    assert data["totals"]["regressions"] == 1
+    metrics = [r["metric"]
+               for r in data["benches"]["hotpath"]["regressions"]]
+    assert metrics == ["hotpath.prefill.S2048.speedup"]

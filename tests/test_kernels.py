@@ -51,8 +51,8 @@ def test_flash_attention_sweep(B, Hq, Hkv, Sq, Sk, d, dtype):
         for kv_len in (None, Sk // 2):
             y = ops.flash_attention(q, k, v, causal=True, window=window,
                                     kv_len=kv_len, q_block=32, kv_block=32)
-            yr = ref.flash_attention_ref(q, k, v, causal=True, window=window,
-                                         kv_len=kv_len)
+            yr = ref.flash_attention_dense_ref(q, k, v, causal=True,
+                                               window=window, kv_len=kv_len)
             np.testing.assert_allclose(np.asarray(y, np.float32),
                                        np.asarray(yr, np.float32), **_tol(dtype))
 
@@ -67,7 +67,7 @@ def test_decode_attention_sweep(B, Hq, Hkv, Smax, d):
         for window in (0, 16):
             y = ops.decode_attention(q, kc, vc, jnp.int32(idx), window=window,
                                      kv_block=32)
-            yr = ref.decode_attention_ref(q, kc, vc, idx, window=window)
+            yr = ref.decode_attention_dense_ref(q, kc, vc, idx, window=window)
             np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
                                        rtol=2e-3, atol=2e-3)
 

@@ -1,0 +1,194 @@
+"""Diff fresh ``BENCH_*.json`` artifacts against committed baselines.
+
+    PYTHONPATH=src python tools/bench_diff.py [--current results/bench]
+        [--baseline results/bench_baseline] [--skip-timing]
+        [--report results/bench/bench_diff_report.json]
+
+The baseline directory holds the committed perf trajectory: one
+``BENCH_<name>.json`` per gated benchmark (claims + flattened scalars,
+the artifact :func:`benchmarks.common.emit_bench_json` writes) plus
+``tolerances.json`` describing how each metric may move:
+
+    {"default": {"kind": "timing", "direction": "both", "rel_tol": 0.5},
+     "metrics": [
+       {"pattern": "hotpath.prefill.*.speedup",
+        "kind": "timing", "direction": "higher", "rel_tol": 0.3},
+       ...]}
+
+* ``pattern`` — fnmatch over ``<bench>.<scalar key>``; first match wins,
+  falling back to ``default``.
+* ``direction`` — which way regression lies: ``lower`` means lower is
+  better (cur may not exceed base by the tolerance), ``higher`` the
+  reverse, ``both`` means stay within the band either way.
+* ``kind`` — ``timing`` metrics are wall-clock-derived and skipped
+  under ``--skip-timing`` (CI runners are noisy); ``structural``
+  metrics are deterministic and always gated.
+* ``rel_tol`` / ``abs_tol`` — allowed slack; a move must clear *both*
+  to count as regression.
+
+A baseline claim that was ``true`` and is ``false`` in the current run
+is always a regression (claims are the benchmark's own gates). Files or
+keys present in the baseline but absent from the current run are
+surfaced as warnings, not failures — partial runs (``--only hotpath``,
+``--smoke``) must stay usable. Exit status: 1 on any regression, else 0.
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+DEFAULT_CURRENT = os.path.join(REPO, "results", "bench")
+DEFAULT_BASELINE = os.path.join(REPO, "results", "bench_baseline")
+FALLBACK_RULE = {"kind": "timing", "direction": "both", "rel_tol": 0.5,
+                 "abs_tol": 0.0}
+
+
+def _load_json(path: str) -> Optional[Dict[str, Any]]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def load_tolerances(baseline_dir: str) -> Dict[str, Any]:
+    spec = _load_json(os.path.join(baseline_dir, "tolerances.json")) or {}
+    default = dict(FALLBACK_RULE)
+    default.update(spec.get("default") or {})
+    return {"default": default, "metrics": list(spec.get("metrics") or [])}
+
+
+def rule_for(tol: Dict[str, Any], metric: str) -> Dict[str, Any]:
+    for rule in tol["metrics"]:
+        if fnmatch.fnmatch(metric, rule.get("pattern", "")):
+            merged = dict(tol["default"])
+            merged.update(rule)
+            return merged
+    return tol["default"]
+
+
+def scalar_verdict(base: float, cur: float, rule: Dict[str, Any]) -> str:
+    """'ok' | 'regression' | 'improvement' for one metric move."""
+    rel = float(rule.get("rel_tol", 0.0))
+    abs_ = float(rule.get("abs_tol", 0.0))
+    slack = max(rel * abs(base), abs_)
+    direction = rule.get("direction", "both")
+    if direction == "lower":          # lower is better
+        if cur > base + slack:
+            return "regression"
+        return "improvement" if cur < base - slack else "ok"
+    if direction == "higher":
+        if cur < base - slack:
+            return "regression"
+        return "improvement" if cur > base + slack else "ok"
+    return "regression" if abs(cur - base) > slack else "ok"
+
+
+def diff_bench(name: str, base: Dict[str, Any], cur: Optional[Dict[str, Any]],
+               tol: Dict[str, Any], skip_timing: bool) -> Dict[str, List]:
+    out: Dict[str, List] = {"regressions": [], "warnings": [],
+                            "improvements": [], "skipped": []}
+    if cur is None:
+        out["warnings"].append(
+            {"metric": name, "why": "no current BENCH artifact"})
+        return out
+
+    base_claims = base.get("claims") or {}
+    cur_claims = cur.get("claims") or {}
+    for claim, ok in sorted(base_claims.items()):
+        if claim not in cur_claims:
+            out["warnings"].append({"metric": f"{name}.claims.{claim}",
+                                    "why": "claim absent from current run"})
+        elif ok and not cur_claims[claim]:
+            out["regressions"].append({"metric": f"{name}.claims.{claim}",
+                                       "base": True, "cur": False,
+                                       "why": "claim flipped true -> false"})
+
+    base_s = base.get("scalars") or {}
+    cur_s = cur.get("scalars") or {}
+    for key, bval in sorted(base_s.items()):
+        metric = f"{name}.{key}"
+        if key not in cur_s:
+            out["warnings"].append({"metric": metric,
+                                    "why": "scalar absent from current run"})
+            continue
+        rule = rule_for(tol, metric)
+        if skip_timing and rule.get("kind") == "timing":
+            out["skipped"].append(metric)
+            continue
+        verdict = scalar_verdict(float(bval), float(cur_s[key]), rule)
+        if verdict != "ok":
+            out[verdict + "s"].append(
+                {"metric": metric, "base": float(bval),
+                 "cur": float(cur_s[key]), "direction": rule["direction"],
+                 "kind": rule.get("kind", "timing")})
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", default=DEFAULT_CURRENT,
+                    help="directory with fresh BENCH_*.json artifacts")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="directory with committed baselines + tolerances")
+    ap.add_argument("--skip-timing", action="store_true",
+                    help="gate only structural metrics (noisy CI runners)")
+    ap.add_argument("--report", default=None,
+                    help="write the full diff report JSON here")
+    args = ap.parse_args(argv)
+
+    if not os.path.isdir(args.baseline):
+        print(f"bench_diff: no baseline directory {args.baseline}")
+        return 2
+    names = sorted(fn[len("BENCH_"):-len(".json")]
+                   for fn in os.listdir(args.baseline)
+                   if fn.startswith("BENCH_") and fn.endswith(".json"))
+    if not names:
+        print(f"bench_diff: no BENCH_*.json baselines in {args.baseline}")
+        return 2
+
+    tol = load_tolerances(args.baseline)
+    report = {"baseline": args.baseline, "current": args.current,
+              "skip_timing": args.skip_timing, "benches": {}}
+    totals = {"regressions": 0, "warnings": 0, "improvements": 0,
+              "skipped": 0}
+    for name in names:
+        base = _load_json(os.path.join(args.baseline, f"BENCH_{name}.json"))
+        cur = _load_json(os.path.join(args.current, f"BENCH_{name}.json"))
+        d = diff_bench(name, base, cur, tol, args.skip_timing)
+        report["benches"][name] = d
+        for k in totals:
+            totals[k] += len(d[k])
+        for r in d["regressions"]:
+            detail = (f"  base={r['base']} cur={r['cur']} "
+                      f"[{r.get('kind', 'claim')}/{r.get('direction', '-')}]"
+                      if "base" in r else "")
+            print(f"REGRESSION {r['metric']}{detail}"
+                  + (f" ({r['why']})" if "why" in r else ""))
+        for w in d["warnings"]:
+            print(f"warning    {w['metric']}: {w['why']}")
+        for i in d["improvements"]:
+            print(f"improved   {i['metric']}: {i['base']:.6g} -> "
+                  f"{i['cur']:.6g}")
+    report["totals"] = totals
+
+    if args.report:
+        os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"report -> {args.report}")
+
+    print(f"bench_diff: {totals['regressions']} regression(s), "
+          f"{totals['improvements']} improvement(s), "
+          f"{totals['warnings']} warning(s), "
+          f"{totals['skipped']} timing metric(s) skipped")
+    return 1 if totals["regressions"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
