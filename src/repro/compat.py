@@ -19,6 +19,15 @@ Probed surfaces
 * Backend capability: whether a TPU backend is attached, and whether
   Pallas interpret mode actually executes on this host (probed by
   running a one-element kernel, not by guessing from the version).
+* Compiled-path probes (serving/executor.py): a process-wide XLA
+  compile counter riding ``jax.monitoring`` backend-compile events
+  (:func:`compile_events` / :class:`CompileCounter` — the proof that
+  SubNetAct actuation never recompiles), AOT compilation through the
+  ``jit(...).lower(...).compile()`` stages API (:func:`aot_compile`,
+  falling back to ``None`` so callers warm eagerly), and whether
+  buffer donation is actually honored on this backend
+  (:func:`donation_works` — a real donated round trip, not a platform
+  guess).
 
 Kernel dispatch tiers
 ---------------------
@@ -57,6 +66,10 @@ __all__ = [
     "make_abstract_mesh",
     "make_mesh",
     "cost_analysis",
+    "compile_events",
+    "CompileCounter",
+    "aot_compile",
+    "donation_works",
     "pallas_interpret_works",
     "cpu_subprocess_env",
     "tier_available",
@@ -215,6 +228,109 @@ def cost_analysis(compiled) -> dict:
     if isinstance(ca, (list, tuple)):
         return dict(ca[0]) if ca else {}
     return dict(ca)
+
+
+# --------------------------------------------------------------------------
+# Compiled-path probes: compile counting, AOT compilation, donation
+# --------------------------------------------------------------------------
+
+_compile_events = 0
+_compile_listener_ok: Optional[bool] = None
+
+
+def _note_compile_event(*args, **kwargs) -> None:
+    """jax.monitoring duration listener. The signature has grown extra
+    kwargs across releases, so accept anything and read the event name
+    positionally; only backend (XLA) compilations are counted — jaxpr
+    tracing and MLIR lowering re-run cheaply on cache hits too."""
+    global _compile_events
+    event = args[0] if args else kwargs.get("event", "")
+    if isinstance(event, str) and "backend_compile" in event:
+        _compile_events += 1
+
+
+def _install_compile_listener() -> bool:
+    global _compile_listener_ok
+    if _compile_listener_ok is None:
+        try:
+            from jax import monitoring
+            monitoring.register_event_duration_secs_listener(
+                _note_compile_event)
+            _compile_listener_ok = True
+        except Exception:
+            _compile_listener_ok = False
+    return _compile_listener_ok
+
+
+def compile_events() -> Optional[int]:
+    """Monotone count of XLA backend compilations in this process, or
+    ``None`` when the ``jax.monitoring`` surface is unavailable.
+
+    This is the SubNetAct enforcement probe: serving code asserts the
+    count does NOT move across subnet actuations (control tuples are
+    traced data, never part of the jit cache key)."""
+    return _compile_events if _install_compile_listener() else None
+
+
+class CompileCounter:
+    """``with CompileCounter() as cc: ...; cc.count`` — XLA backend
+    compilations during the block. ``cc.available`` is False (and
+    ``count`` 0) when the monitoring probe is missing; callers gating
+    hard guarantees should skip rather than trust a blind counter."""
+
+    def __init__(self):
+        self.available = _install_compile_listener()
+        self._start = 0
+        self.count = 0
+
+    def __enter__(self) -> "CompileCounter":
+        self._start = _compile_events
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self.available:
+            self.count = _compile_events - self._start
+
+
+def aot_compile(jitted, *args, **kwargs):
+    """``jitted.lower(*args, **kwargs).compile()`` behind a probe.
+
+    Returns the compiled executable — ready to call with concrete
+    arrays matching the lowered shapes — or ``None`` when the AOT
+    stages API is missing or lowering fails on this release; callers
+    fall back to eager first-call warmup."""
+    lower = getattr(jitted, "lower", None)
+    if lower is None:
+        return None
+    try:
+        return lower(*args, **kwargs).compile()
+    except Exception:
+        return None
+
+
+_donation_probe: Optional[bool] = None
+
+
+def donation_works() -> bool:
+    """Probe (once) whether buffer donation is honored on this backend.
+
+    An actual donated round trip checking the input buffer was
+    consumed — not a platform guess: CPU donation flipped from ignored
+    (with a warning) to honored across jaxlib releases, and the only
+    trustworthy signal is the input array turning deleted."""
+    global _donation_probe
+    if _donation_probe is not None:
+        return _donation_probe
+    try:
+        import jax.numpy as jnp
+        f = jax.jit(lambda x: x + 1, donate_argnums=(0,))
+        x = jnp.ones((8,), jnp.float32)
+        jax.block_until_ready(f(x))
+        deleted = getattr(x, "is_deleted", None)
+        _donation_probe = bool(deleted()) if callable(deleted) else False
+    except Exception:
+        _donation_probe = False
+    return _donation_probe
 
 
 # --------------------------------------------------------------------------

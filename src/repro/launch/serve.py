@@ -18,16 +18,104 @@ spawns ahead of the arrival forecast crossing capacity (reactive
 fallback without signal); ``--predictive-joins`` opens forecast-led
 join windows even at saturation; ``--forecast-window`` sets the shared
 estimator window. The forecast snapshot rides the output JSON.
+
+Compiled execution path (serving/executor.py): ``--execute real`` runs
+actual subnet forward passes on this host — the reduced config behind
+the AOT-warmed, shape-bucketed ``SubnetExecutor``, served by the
+asyncio Router/ClusterRouter with the SAME engine/policy/residency
+stack as the simulator. ``--profile measured`` replaces the analytic
+roofline ``LatencyProfile`` with wall-clock per-(subnet, batch-bucket)
+latencies measured through the warmed executor (usable with either
+``--execute`` mode). Both need a token-frontend LM arch, e.g.
+``--arch qwen2-1.5b``.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
+import time
+
+import numpy as np
 
 from repro.configs import get_config
 from repro.serving import cluster, policies, profiler, simulator, traces
 from repro.serving.autoscaler import SCALINGS, AutoscaleConfig
 from repro.serving.forecast import ForecastConfig
+
+
+def _host_latency(executor, subnet_idx: int, seq_len: int,
+                  iters: int = 3) -> float:
+    """Best-of-k wall-clock for a warmed B=1 prefill on this host."""
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        executor.run_prefill(subnet_idx, np.ones((1, seq_len), np.int32))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _serve_real(args, cfg, prof, pol, executor, arr, slo_s, rate, warm):
+    """Serve ``arr`` with real forward passes through the asyncio
+    router(s); scheduling stays entirely inside the unchanged engine."""
+    from repro import compat
+    from repro.serving import runtime
+
+    async def go():
+        rng = np.random.default_rng(args.seed)
+        payloads = rng.integers(0, cfg.vocab_size,
+                                (len(arr), args.seq_len)).astype(np.int32)
+        if args.replicas > 1:
+            router = runtime.ClusterRouter(
+                prof, pol,
+                [executor.make_workers(args.workers)
+                 for _ in range(args.replicas)],
+                placement=args.placement, placement_seed=args.seed,
+                slo=slo_s)
+        else:
+            router = runtime.Router(prof, pol,
+                                    executor.make_workers(args.workers),
+                                    executor=executor)
+        await router.start()
+        base = compat.compile_events()
+        t0 = time.perf_counter()
+        futs = []
+        for i, t in enumerate(arr):
+            now = time.perf_counter() - t0
+            if t > now:
+                await asyncio.sleep(t - now)
+            futs.append(await router.submit(payloads[i], slo_s=slo_s))
+        await asyncio.gather(*futs)
+        await router.drain()
+        compiles = (None if base is None
+                    else compat.compile_events() - base)
+        return router, compiles
+
+    router, serve_compiles = asyncio.run(go())
+    st = router.stats()
+    recs = router.records()
+    lats = sorted(r.finish - r.arrival for r in recs
+                  if r.finish is not None)
+
+    def pct(q: float):
+        return (lats[min(int(q * len(lats)), len(lats) - 1)] * 1e3
+                if lats else None)
+
+    return {"arch": args.arch, "mode": "real",
+            "profile": args.profile_mode, "policy": pol.name,
+            "queries": len(recs), "replicas": args.replicas,
+            "workers": args.workers,
+            "rate_qps": round(rate, 1), "slo_ms": round(slo_s * 1e3, 3),
+            "slo_attainment": st["slo_attainment"],
+            "mean_acc": st["mean_acc"],
+            "p50_latency_ms": pct(0.50), "p99_latency_ms": pct(0.99),
+            "switch_rate": st["switch_rate"],
+            "actuation_seconds": st["actuation_seconds"],
+            # SubNetAct live: compiles observed while serving (None if
+            # the jax.monitoring probe is unavailable); warmed serving
+            # should report 0
+            "serve_phase_compiles": serve_compiles,
+            "warmup": warm, "executor": executor.counters()}
 
 
 def main():
@@ -38,10 +126,39 @@ def main():
     ap.add_argument("--clipper-idx", type=int, default=-1)
     ap.add_argument("--trace", default="bursty",
                     choices=("bursty", "time_varying", "maf"))
-    ap.add_argument("--rate", type=float, default=7000)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="mean arrival rate q/s (default 7000; "
+                         "--execute real derives a host-safe rate from "
+                         "the profile when unset)")
     ap.add_argument("--cv2", type=float, default=4)
     ap.add_argument("--tau", type=float, default=500)
     ap.add_argument("--duration", type=float, default=10.0)
+    ap.add_argument("--execute", default="sim", choices=("sim", "real"),
+                    help="sim: discrete-event simulation with profile "
+                         "service times (default). real: execute actual "
+                         "subnet forward passes on this host through the "
+                         "AOT-warmed SubnetExecutor (serving/executor.py) "
+                         "behind the asyncio router — reduced config, "
+                         "token-frontend LM archs only; incompatible with "
+                         "--autoscale/--faults/--replica-deaths")
+    ap.add_argument("--profile", dest="profile_mode", default="analytic",
+                    choices=("analytic", "measured"),
+                    help="latency profile the engine schedules from. "
+                         "analytic: deterministic hardware-roofline model "
+                         "(profiler.build_profile, default). measured: "
+                         "true wall-clock per-(subnet, batch-bucket) "
+                         "latencies measured on this host through the "
+                         "warmed executor (token-frontend LM archs only; "
+                         "uses the reduced config; works with either "
+                         "--execute mode)")
+    ap.add_argument("--queries", type=int, default=64,
+                    help="--execute real: number of trace arrivals to "
+                         "serve (kept small — every query is a real "
+                         "forward pass)")
+    ap.add_argument("--seq-len", type=int, default=16,
+                    help="--execute real / --profile measured: prompt "
+                         "tokens per query (right-padded to the "
+                         "executor's seq bucket)")
     ap.add_argument("--workers", type=int, default=8,
                     help="workers per replica group")
     ap.add_argument("--replicas", type=int, default=1,
@@ -50,7 +167,10 @@ def main():
     ap.add_argument("--placement", default="round_robin",
                     choices=sorted(cluster.PLACEMENTS),
                     help="replica placement policy (cluster mode only)")
-    ap.add_argument("--slo-ms", type=float, default=36.0)
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="query SLO (default 36.0; --execute real "
+                         "derives ~25x the max-subnet B=1 latency from "
+                         "the profile when unset, sized for host jitter)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--faults", default="",
                     help="comma list wid:t, e.g. 7:12,6:24 "
@@ -99,21 +219,75 @@ def main():
                  f"got {args.cold_start!r}")
 
     cfg = get_config(args.arch)
-    prof = profiler.build_profile(cfg)
+    executor, warm = None, None
+    if args.execute == "real" or args.profile_mode == "measured":
+        if cfg.family == "conv" or cfg.frontend != "token":
+            ap.error(f"--execute real / --profile measured execute the "
+                     f"LM path and need a token-frontend arch (try "
+                     f"--arch qwen2-1.5b); {args.arch} is "
+                     f"family={cfg.family}, frontend={cfg.frontend}")
+        if args.execute == "real" and (args.autoscale or args.faults
+                                       or args.replica_deaths):
+            ap.error("--execute real does not support --autoscale/"
+                     "--faults/--replica-deaths; use the simulator for "
+                     "fault and scaling studies")
+        from repro.serving.executor import build_executor
+        cfg = cfg.reduced()             # CPU-executable twin, same family
+        executor = build_executor(cfg, seed=args.seed)
+
+    if args.profile_mode == "measured":
+        # AOT-warm first so measurement never times a compile
+        batches = (1, 2, 4, 8)
+        warm = executor.warmup(batches=batches, seqs=(args.seq_len,))
+        prof = executor.measured_profile(batches=batches,
+                                         seq_len=args.seq_len)
+    else:
+        prof = profiler.build_profile(cfg)
+        if executor is not None:
+            # warm every bucket the analytic profile lets the policy
+            # choose, so serving stays compile-free
+            warm = executor.warmup(batches=prof.batches,
+                                   seqs=(args.seq_len,))
+
     if args.policy == "clipper":
         idx = args.clipper_idx if args.clipper_idx >= 0 else prof.n_pareto - 1
         pol = policies.ClipperFixed(idx)
     else:
         pol = policies.ALL_POLICIES[args.policy]()
 
+    rate = args.rate if args.rate is not None else 7000.0
+    slo_ms = args.slo_ms if args.slo_ms is not None else 36.0
+    duration = args.duration
+    if args.execute == "real":
+        # host-safe pacing: the analytic roofline models the paper's
+        # 2080Ti, not this host — derive rate/SLO from latencies
+        # actually observed here (examples/serve_bursty.py sizing:
+        # SLO ~= 25x the max-subnet B=1 latency, rate leaves 4x
+        # headroom on the min-subnet latency)
+        lat_fast = _host_latency(executor, 0, args.seq_len)
+        lat_slow = _host_latency(executor, executor.n_subnets - 1,
+                                 args.seq_len)
+        if args.rate is None:
+            rate = 0.25 / lat_fast
+        if args.slo_ms is None:
+            slo_ms = lat_slow * 25 * 1e3
+        duration = args.queries / max(rate, 1e-9)
+
     if args.trace == "bursty":
-        arr = traces.bursty_trace(args.rate * 0.2, args.rate * 0.8, args.cv2,
-                                  args.duration, args.seed)
+        arr = traces.bursty_trace(rate * 0.2, rate * 0.8, args.cv2,
+                                  duration, args.seed)
     elif args.trace == "time_varying":
-        arr = traces.time_varying_trace(args.rate * 0.4, args.rate, args.tau,
-                                        args.cv2, args.duration, args.seed)
+        arr = traces.time_varying_trace(rate * 0.4, rate, args.tau,
+                                        args.cv2, duration, args.seed)
     else:
-        arr = traces.maf_like_trace(args.rate, args.duration, seed=args.seed)
+        arr = traces.maf_like_trace(rate, duration, seed=args.seed)
+
+    if args.execute == "real":
+        arr = np.asarray(arr, dtype=float)[: args.queries]
+        out = _serve_real(args, cfg, prof, pol, executor, arr,
+                          slo_ms / 1e3, rate, warm)
+        print(json.dumps(out, indent=1))
+        return
 
     if args.replicas > 1 or args.autoscale:
         faults = {}
@@ -153,7 +327,7 @@ def main():
         ccfg = simulator.ClusterConfig(
             n_replicas=args.replicas, workers_per_replica=args.workers,
             placement=args.placement, placement_seed=args.seed,
-            slo=args.slo_ms / 1e3, fault_times=faults, replica_deaths=deaths,
+            slo=slo_ms / 1e3, fault_times=faults, replica_deaths=deaths,
             load_on_switch=args.load_on_switch,
             continuous_batching=args.continuous_batching,
             predictive_joins=args.predictive_joins, forecast=forecast,
@@ -186,7 +360,7 @@ def main():
                 wid, t = part.split(":")
                 faults[int(wid)] = float(t)
         scfg = simulator.SimConfig(n_workers=args.workers,
-                                   slo=args.slo_ms / 1e3,
+                                   slo=slo_ms / 1e3,
                                    load_on_switch=args.load_on_switch,
                                    fault_times=faults, seed=args.seed,
                                    continuous_batching=args.continuous_batching,

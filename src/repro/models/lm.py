@@ -133,17 +133,33 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype=None):
 # tiny generate loop (examples / integration tests only)
 # --------------------------------------------------------------------------
 
+_DECODE_STEP_CACHE: Dict[Tuple[ArchConfig, str], Any] = {}
+
+
+def cached_decode_step(cfg: ArchConfig, slice_mode: str = "mask"):
+    """Module-level jitted decode step, keyed on ``(cfg, slice_mode)``
+    with the control tuple as a *traced* argument: repeated ``generate``
+    calls — even actuating different subnets — compile the step exactly
+    once per (cfg, geometry) instead of once per call."""
+    key = (cfg, slice_mode)
+    fn = _DECODE_STEP_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(lambda p, t, ctrl, c, i: decode_step(
+            p, cfg, t, ctrl, c, i, slice_mode=slice_mode))
+        _DECODE_STEP_CACHE[key] = fn
+    return fn
+
 
 def generate(params, cfg: ArchConfig, prompt, ctrl, max_new: int, seq_cap: int = 256):
     """Greedy decode; prompt teacher-forced through the decode path so it
     works uniformly across attention/SSM/xLSTM families."""
     B, P = prompt.shape
     cache = init_cache(cfg, B, seq_cap)
-    step = jax.jit(lambda p, t, c, i: decode_step(p, cfg, t, ctrl, c, i))
+    step = cached_decode_step(cfg)
     tok = prompt[:, :1]
     out = [tok]
     for i in range(P + max_new - 1):
-        logits, cache = step(params, tok, cache, jnp.int32(i))
+        logits, cache = step(params, tok, ctrl, cache, jnp.int32(i))
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         tok = prompt[:, i + 1: i + 2] if i + 1 < P else nxt
         out.append(tok)

@@ -194,7 +194,10 @@ def measure_profile(step_fns: Sequence[Callable[[int], None]],
                     n_buckets: int = 12, arch: str = "measured",
                     monotonize: bool = True) -> LatencyProfile:
     """Wall-clock profile: ``step_fns[i](batch)`` runs subnet i on this
-    host (used by the asyncio runtime + quickstart example).
+    host. The supported measured path — ``launch/serve.py --profile
+    measured`` feeds ``SubnetExecutor.profile_step_fns`` through here
+    (warm the executor first so no sample times a compile) and serves
+    from the result; the quickstart example does the same by hand.
 
     ``monotonize`` enforces the P1/P2 structure (cummax along batch and
     accuracy) — measurement jitter that inverts the profile would

@@ -77,10 +77,14 @@ class Router:
     def __init__(self, profile: LatencyProfile, policy: Policy,
                  workers: Sequence[WorkerHandle],
                  clock=None, engine_cfg: Optional[EngineConfig] = None,
-                 replica_id: int = 0):
+                 replica_id: int = 0, executor=None):
         self.profile = profile
         self.policy = policy
         self.workers = list(workers)
+        # optional serving/executor.py SubnetExecutor backing the
+        # workers: pure execution — the engine never consults it, the
+        # router only surfaces its counters through stats()
+        self.executor = executor
         self.clock = clock if clock is not None else WallClock()
         self.engine = SchedulingEngine(
             profile, policy, engine_cfg or EngineConfig(),
@@ -283,7 +287,10 @@ class Router:
         return self.engine.residency.resident(wid)
 
     def stats(self) -> Dict[str, float]:
-        return self.engine.stats()
+        st = self.engine.stats()
+        if self.executor is not None:
+            st["executor"] = self.executor.counters()
+        return st
 
     def records(self) -> List[CompletionRecord]:
         return self.engine.records()

@@ -10,12 +10,13 @@ coverage can't silently regress. CI uploads the JSON report
 (results/coverage/serving_coverage.json) as an artifact.
 
 The floor is measured, not aspirational: bump it when new tests raise
-coverage, never lower it to make a PR pass. Measured 2026-08-01 (PR 5,
-forecast property suite + predictive parity tests included): ~90.6%
-total (run-to-run wobble ~0.2pt from property-test example draws) —
-floor 90 (PR 4 floor was 88). Uses the same stdlib ``trace``
-measurement in CI and locally, so the number is stable across hosts
-(no third-party coverage wheel needed — the container has none).
+coverage, never lower it to make a PR pass. Measured 2026-08-09 (PR 8,
+executor compile-counter suite included; serving/executor.py joins the
+target set at ~95.6%): ~92.2% total (run-to-run wobble ~0.2pt from
+property-test example draws) — floor 91 (PR 5 floor was 90, PR 4 was
+88). Uses the same stdlib ``trace`` measurement in CI and locally, so
+the number is stable across hosts (no third-party coverage wheel
+needed — the container has none).
 """
 from __future__ import annotations
 
@@ -26,7 +27,7 @@ import os
 import sys
 import trace
 
-FAIL_UNDER = 90.0                       # percent, see docstring
+FAIL_UNDER = 91.0                       # percent, see docstring
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 TARGET_DIR = os.path.join(REPO, "src", "repro", "serving")
 OUT_PATH = os.path.join(REPO, "results", "coverage",
@@ -40,6 +41,7 @@ TEST_FILES = [
     "tests/test_autoscaler.py",
     "tests/test_cluster.py",
     "tests/test_engine.py",
+    "tests/test_executor.py",
     "tests/test_forecast.py",
     "tests/test_metrics.py",
     "tests/test_policies.py",
