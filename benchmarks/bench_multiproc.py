@@ -1,0 +1,164 @@
+"""Multi-process serving plane (transport="proc", serving/ipc.py):
+parity with inproc, replica-death conservation over real OS processes,
+and the reason the transport exists — worker compute that is GIL-bound
+inproc runs genuinely parallel across replica processes.
+
+Cells:
+  * parity — identical paced arrivals through an inproc and a proc
+    cluster (MaxAcc + round_robin + generous SLO: completion records
+    are timing-independent) must produce the same
+    (qid, dropped, served_acc, replica) signatures;
+  * death — SIGKILL one replica process mid-run: the coordinator
+    re-routes its queue to survivors and every query still resolves
+    exactly once;
+  * GIL scale-out — workers busy-spin ``work_ms`` of real CPU per
+    batch. Inproc, those spins serialize on the GIL no matter how many
+    replica groups exist; as processes they overlap. The speedup claim
+    (proc makespan beats inproc) gates in full mode only — CI boxes
+    are too noisy/small-core for a timing gate, so --smoke reports it
+    informationally and gates the structural claims above.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import sys
+import time
+
+from benchmarks.common import banner, save, table
+from repro.configs import get_config
+from repro.serving import policies, profiler
+from repro.serving.runtime import ClusterRouter, WorkerHandle
+from repro.serving.replica_proc import make_worker_run
+
+SLO_S = 10.0            # generous: no policy drops, records deterministic
+PACE_S = 0.004
+
+
+def _sig(recs):
+    """Timing-independent completion signature (latency excluded)."""
+    return sorted((r.qid, bool(r.dropped),
+                   round(r.served_acc or 0.0, 9), r.replica) for r in recs)
+
+
+def _spin_groups(n_replicas, workers, work_ms):
+    run = make_worker_run(work_ms)
+    return [[WorkerHandle(wid=i, run=run) for i in range(workers)]
+            for _ in range(n_replicas)]
+
+
+async def _serve(router, n_queries, pace=PACE_S, slo=SLO_S):
+    """Submit ``n_queries`` paced arrivals, drain, return (records,
+    makespan seconds). Makespan excludes process spawn (start())."""
+    await router.start()
+    t0 = time.perf_counter()
+    futs = [await router.submit([float(i)], slo_s=slo)
+            for i in range(n_queries)
+            if not pace or not await asyncio.sleep(pace)]
+    await asyncio.gather(*futs)
+    await router.drain(60.0)
+    return router.records(), time.perf_counter() - t0
+
+
+def run(smoke: bool = False) -> dict:
+    banner("bench_multiproc (proc transport: serving/ipc.py)")
+    prof = profiler.build_profile(get_config("ofa_resnet"))
+    n_par = 16 if smoke else 32
+
+    # -- 1) parity: proc records == inproc records ---------------------
+    recs_in, _ = asyncio.run(_serve(
+        ClusterRouter(prof, policies.MaxAcc(), _spin_groups(2, 2, 0.0)),
+        n_par))
+    recs_proc, _ = asyncio.run(_serve(
+        ClusterRouter(prof, policies.MaxAcc(), [2, 2], transport="proc"),
+        n_par))
+    parity = _sig(recs_proc) == _sig(recs_in)
+    used = sorted({r.replica for r in recs_proc})
+    print(f"parity over {n_par} paced queries: "
+          f"{'MATCH' if parity else 'MISMATCH'} "
+          f"(proc replicas used: {used})")
+
+    # -- 2) replica death: SIGKILL one process mid-run -----------------
+    async def death_run():
+        router = ClusterRouter(prof, policies.MaxAcc(), [1, 1],
+                               transport="proc", work_ms=100.0)
+        await router.start()
+        futs = [await router.submit([float(i)], slo_s=SLO_S)
+                for i in range(10)
+                if not await asyncio.sleep(0.005)]
+        await asyncio.sleep(0.05)
+        router.kill_replica(0)          # SIGKILL + coordinator re-route
+        await asyncio.gather(*futs)
+        await router.drain(60.0)
+        return router.records()
+
+    drecs = asyncio.run(death_run())
+    death = {
+        "resolved": len(drecs), "n": 10,
+        "served_by_survivor": sum(1 for r in drecs
+                                  if not r.dropped and r.replica == 1),
+        "dropped": sum(1 for r in drecs if r.dropped),
+    }
+    print(f"death: {death['resolved']}/10 resolved, "
+          f"{death['served_by_survivor']} served by survivor, "
+          f"{death['dropped']} dropped")
+
+    # -- 3) GIL scale-out: spin workers, inproc threads vs processes ---
+    work_ms = 30.0 if smoke else 60.0
+    n_gil = 16 if smoke else 32
+    groups = 4
+    timings, rows = {}, []
+    for name, router in (
+            ("inproc", ClusterRouter(prof, policies.MaxAcc(),
+                                     _spin_groups(groups, 1, work_ms))),
+            ("proc", ClusterRouter(prof, policies.MaxAcc(), [1] * groups,
+                                   transport="proc", work_ms=work_ms))):
+        recs, makespan = asyncio.run(_serve(router, n_gil, pace=0.002))
+        timings[name] = {"makespan_s": makespan,
+                         "resolved": len(recs), "n": n_gil,
+                         "served": sum(1 for r in recs if not r.dropped)}
+        rows.append([name, f"{makespan * 1e3:.0f}",
+                     timings[name]["served"], n_gil])
+    speedup = timings["inproc"]["makespan_s"] / max(
+        timings["proc"]["makespan_s"], 1e-9)
+    print(table(["transport", "makespan ms", "served", "queries"], rows))
+    print(f"{groups} replicas x {work_ms:.0f}ms CPU spin per batch: "
+          f"proc is {speedup:.2f}x faster than GIL-bound inproc")
+
+    structural = {
+        "proc_records_match_inproc": parity,
+        "every_replica_used": used == [0, 1],
+        "all_queries_accounted": (
+            len(recs_in) == n_par and len(recs_proc) == n_par
+            and all(t["resolved"] == t["n"] for t in timings.values())),
+        "death_conserves_queries": death["resolved"] == death["n"],
+        "death_orphans_reach_survivors": death["served_by_survivor"] > 0,
+    }
+    perf = {"proc_beats_gil_bound_inproc": speedup >= 1.3}
+    claims = dict(structural) if smoke else {**structural, **perf}
+    payload = {"parity": {"n": n_par, "match": parity, "replicas_used": used},
+               "replica_death": death, "gil_scaleout": timings,
+               "speedup": speedup, "work_ms": work_ms, "smoke": smoke,
+               "perf_claims_informational": perf if smoke else None,
+               "claims": claims}
+    save("multiproc", payload)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller cells; gate only structural claims "
+                         "(the GIL speedup is reported, not gated)")
+    args = ap.parse_args(argv)
+    payload = run(smoke=args.smoke)
+    failures = [k for k, ok in payload["claims"].items() if not ok]
+    if failures:
+        print(f"\nFAILED claims: {failures}")
+        return 1
+    print("\nall multiproc claims PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,9 +23,10 @@ from benchmarks import (bench_acceleration, bench_actuation,
                         bench_cluster_scaleout, bench_continuous_batching,
                         bench_executor, bench_hotpath, bench_ilp_oracle,
                         bench_control_space, bench_fault_tolerance,
-                        bench_maf, bench_memory, bench_pareto,
-                        bench_policies, bench_predictive, bench_residency,
-                        bench_scalability, bench_throughput_range)
+                        bench_maf, bench_memory, bench_multiproc,
+                        bench_pareto, bench_policies, bench_predictive,
+                        bench_residency, bench_scalability,
+                        bench_throughput_range)
 from benchmarks.common import banner, emit_bench_json, save, table
 
 ALL = {
@@ -48,6 +49,7 @@ ALL = {
     "ilp_oracle": bench_ilp_oracle.run,          # SS4.2.1 Eq. 1
     "hotpath": bench_hotpath.run,                # kernel/engine perf gate
     "executor": bench_executor.run,              # compiled-path serving
+    "multiproc": bench_multiproc.run,            # proc transport (ipc.py)
 }
 
 

@@ -72,6 +72,7 @@ __all__ = [
     "donation_works",
     "pallas_interpret_works",
     "cpu_subprocess_env",
+    "host_devices_env",
     "tier_available",
     "kernel_tier",
     "explicit_kernel_tier",
@@ -363,6 +364,21 @@ def cpu_subprocess_env(**extra) -> dict:
         "JAX_PLATFORMS": "cpu",
     }
     env.update(extra)
+    return env
+
+
+def host_devices_env(n: int, **extra) -> dict:
+    """``cpu_subprocess_env`` plus fake-device pinning: with ``n > 0``
+    the child sees ``XLA_FLAGS=--xla_force_host_platform_device_count=n``
+    (appended to any inherited XLA_FLAGS), so its *first* jax import
+    gets an n-device CPU host — the HomebrewNLP-Jax/olmax idiom that
+    lets sharded multi-process tests run on CPU CI without TPUs. Used
+    by serving/ipc.py to spawn replica worker processes."""
+    env = cpu_subprocess_env(**extra)
+    if n and int(n) > 0:
+        flags = env.get("XLA_FLAGS", os.environ.get("XLA_FLAGS", ""))
+        pin = f"--xla_force_host_platform_device_count={int(n)}"
+        env["XLA_FLAGS"] = f"{flags} {pin}".strip()
     return env
 
 

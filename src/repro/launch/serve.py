@@ -19,6 +19,15 @@ fallback without signal); ``--predictive-joins`` opens forecast-led
 join windows even at saturation; ``--forecast-window`` sets the shared
 estimator window. The forecast snapshot rides the output JSON.
 
+Multi-process serving plane (serving/ipc.py): ``--transport proc
+--procs K`` serves the trace LIVE through K replica worker processes —
+one OS process per replica group behind the IPC front door, placement
+still owned by the in-process coordinator. Echo workers (optionally
+``--work-ms`` of real CPU spin per batch) stand in for model execution;
+arrivals are capped at ``--queries``. Incompatible with ``--execute
+real``, ``--profile measured``, ``--autoscale``, ``--faults`` and
+``--replica-deaths``.
+
 Compiled execution path (serving/executor.py): ``--execute real`` runs
 actual subnet forward passes on this host — the reduced config behind
 the AOT-warmed, shape-bucketed ``SubnetExecutor``, served by the
@@ -118,6 +127,56 @@ def _serve_real(args, cfg, prof, pol, executor, arr, slo_s, rate, warm):
             "warmup": warm, "executor": executor.counters()}
 
 
+def _serve_proc(args, prof, pol, arr, slo_s, rate):
+    """Serve ``arr`` live through one OS process per replica group
+    (serving/ipc.py). The coordinator in THIS process still owns
+    admission/placement/lifecycle; the children own scheduling."""
+    from repro.serving import runtime
+
+    async def go():
+        router = runtime.ClusterRouter(
+            prof, pol, [args.workers] * args.procs,
+            placement=args.placement, placement_seed=args.seed,
+            transport="proc", work_ms=args.work_ms,
+            host_devices=args.host_devices,
+            engine_cfg=(runtime.EngineConfig(
+                continuous_batching=args.continuous_batching
+                or args.predictive_joins,
+                predictive_joins=args.predictive_joins,
+                forecast=(ForecastConfig(window=args.forecast_window)
+                          if args.predictive_joins else None))
+                if args.continuous_batching or args.predictive_joins
+                else None))
+        await router.start()
+        t0 = time.perf_counter()
+        futs = []
+        for i, t in enumerate(arr):
+            now = time.perf_counter() - t0
+            if t > now:
+                await asyncio.sleep(t - now)
+            futs.append(await router.submit([float(i)], slo_s=slo_s))
+        await asyncio.gather(*futs)
+        await router.drain(60.0)
+        return router, time.perf_counter() - t0
+
+    router, makespan = asyncio.run(go())
+    st = router.stats()
+    recs = router.records()
+    return {"arch": args.arch, "mode": "proc", "policy": pol.name,
+            "queries": len(recs), "procs": args.procs,
+            "workers_per_proc": args.workers, "work_ms": args.work_ms,
+            "rate_qps": round(rate, 1), "slo_ms": round(slo_s * 1e3, 3),
+            "slo_attainment": st["slo_attainment"],
+            "mean_acc": st["mean_acc"],
+            "p50_latency_ms": st["p50_latency_s"] * 1e3,
+            "p99_latency_ms": st["p99_latency_s"] * 1e3,
+            "load_imbalance": st["load_imbalance"],
+            "per_replica_served": {r: v["served"]
+                                   for r, v in st["replicas"].items()},
+            "makespan_s": round(makespan, 4),
+            "replica_pids": [ch.proc.pid for ch in router._chans]}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="ofa_resnet")
@@ -152,9 +211,10 @@ def main():
                          "uses the reduced config; works with either "
                          "--execute mode)")
     ap.add_argument("--queries", type=int, default=64,
-                    help="--execute real: number of trace arrivals to "
-                         "serve (kept small — every query is a real "
-                         "forward pass)")
+                    help="--execute real / --transport proc: number of "
+                         "trace arrivals to serve (kept small — every "
+                         "query is a real forward pass or a live IPC "
+                         "round trip)")
     ap.add_argument("--seq-len", type=int, default=16,
                     help="--execute real / --profile measured: prompt "
                          "tokens per query (right-padded to the "
@@ -167,6 +227,22 @@ def main():
     ap.add_argument("--placement", default="round_robin",
                     choices=sorted(cluster.PLACEMENTS),
                     help="replica placement policy (cluster mode only)")
+    ap.add_argument("--transport", default="inproc",
+                    choices=("inproc", "proc"),
+                    help="proc: serve LIVE through one OS process per "
+                         "replica group over the IPC front door "
+                         "(serving/ipc.py); inproc keeps the simulated/"
+                         "in-process planes (default)")
+    ap.add_argument("--procs", type=int, default=2,
+                    help="--transport proc: replica worker processes "
+                         "(each gets --workers workers)")
+    ap.add_argument("--work-ms", type=float, default=0.0,
+                    help="--transport proc: real CPU busy-spin per batch "
+                         "in the worker processes (0 = pure echo)")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="--transport proc: pin N fake XLA host devices "
+                         "per replica process via XLA_FLAGS before the "
+                         "child's first jax import (0 = no jax import)")
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="query SLO (default 36.0; --execute real "
                          "derives ~25x the max-subnet B=1 latency from "
@@ -219,6 +295,13 @@ def main():
                  f"got {args.cold_start!r}")
 
     cfg = get_config(args.arch)
+    if args.transport == "proc" and (
+            args.execute == "real" or args.profile_mode == "measured"
+            or args.autoscale or args.faults or args.replica_deaths):
+        ap.error("--transport proc serves echo/spin workers through "
+                 "replica processes; it does not combine with --execute "
+                 "real, --profile measured, --autoscale, --faults or "
+                 "--replica-deaths (ROADMAP multi-host item)")
     executor, warm = None, None
     if args.execute == "real" or args.profile_mode == "measured":
         if cfg.family == "conv" or cfg.frontend != "token":
@@ -286,6 +369,12 @@ def main():
         arr = np.asarray(arr, dtype=float)[: args.queries]
         out = _serve_real(args, cfg, prof, pol, executor, arr,
                           slo_ms / 1e3, rate, warm)
+        print(json.dumps(out, indent=1))
+        return
+
+    if args.transport == "proc":
+        arr = np.asarray(arr, dtype=float)[: args.queries]
+        out = _serve_proc(args, prof, pol, arr, slo_ms / 1e3, rate)
         print(json.dumps(out, indent=1))
         return
 

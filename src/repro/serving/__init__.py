@@ -37,4 +37,16 @@ derivation, and the switch_rate / actuation_seconds metrics. Layering
 rule: residency state lives in residency.py only — the engine is its
 sole writer (actuate on launch, forget on death), everything else
 reads; residency-blind configs replay pre-refactor schedules
-bit-for-bit."""
+bit-for-bit.
+
+Multi-process plane (serving/ipc.py + serving/replica_proc.py):
+``ClusterRouter(transport="proc")`` runs each replica group as its own
+OS process behind a length-prefixed JSON frame protocol (seq-verified,
+heartbeat dead-peer detection, typed FrameError taxonomy) over an
+inherited socketpair, with XLA host-device pinning via
+compat.host_devices_env. Layering rule: the parent-side coordinator
+keeps sole ownership of admission/placement/lifecycle; children own
+scheduling through a full in-process Router; the transport only
+serializes placement decisions out and completion records back —
+inproc/proc record parity is the gate (tests/test_ipc.py,
+benchmarks/bench_multiproc.py)."""

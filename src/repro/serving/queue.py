@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import heapq
-import itertools
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -17,10 +16,18 @@ class Query:
     # replica group that (last) admitted the query; stamped by the
     # engine so completion records carry serving placement
     replica: int = field(compare=False, default=0)
+    # True once a queue has assigned ``seq``: a re-pushed query (fault
+    # re-enqueue, replica-death re-route) keeps its first-assigned seq
+    # so it never loses its FIFO tie-break position to later arrivals
+    seq_assigned: bool = field(compare=False, default=False)
     # filled at completion
     finish: Optional[float] = field(compare=False, default=None)
     served_acc: Optional[float] = field(compare=False, default=None)
     dropped: bool = field(compare=False, default=False)
+    # dropped because the router drained (shutdown timeout) with the
+    # query still unresolved — distinct from the policy's infeasible
+    # drops, so operators can tell overload from shutdown loss
+    timed_out: bool = field(compare=False, default=False)
 
 
 class EDFQueue:
@@ -29,10 +36,19 @@ class EDFQueue:
 
     def __init__(self):
         self._heap: List[Query] = []
-        self._count = itertools.count()
+        self._next_seq = 0
 
     def push(self, q: Query) -> None:
-        q.seq = next(self._count)
+        if not q.seq_assigned:
+            q.seq = self._next_seq
+            q.seq_assigned = True
+            self._next_seq += 1
+        else:
+            # re-push: keep the first-assigned seq so a fault-re-enqueued
+            # or drain-re-routed query retains its FIFO position at an
+            # equal deadline; advance this queue's counter past it so
+            # genuinely-later arrivals still sort behind it
+            self._next_seq = max(self._next_seq, q.seq + 1)
         heapq.heappush(self._heap, q)
 
     def pop(self) -> Query:

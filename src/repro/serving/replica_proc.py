@@ -1,0 +1,161 @@
+"""Replica worker-process entrypoint for the proc transport
+(serving/ipc.py).
+
+``python -m repro.serving.replica_proc --fd N`` serves one replica
+group over the inherited socket: the first frame (``config``) carries a
+``ReplicaSpec``, from which the child builds one full ``Router`` — its
+own ``SchedulingEngine``, policy (rebuilt by registry name), worker
+pool, and wall clock — then answers ``submit`` frames with
+``completion`` frames as futures resolve, heartbeating in between.
+
+Device pinning: the parent spawns this process with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` already in the
+env (``compat.host_devices_env`` — the HomebrewNLP-Jax/olmax idiom), so
+when the spec asks for fake devices the child's *first* jax import sees
+the flag and CPU CI gets an N-device host without TPUs. Nothing in this
+module (or the serving stack it imports) touches jax otherwise — the
+import happens here, after the flag is set, or not at all.
+
+Scheduling stays engine-owned: the child's router drops infeasible
+queries, forms batches, and re-enqueues on worker faults exactly as
+inproc; the parent only learns outcomes through completion frames.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import os
+import socket
+import time
+from typing import Any, List, Optional
+
+from repro.serving.ipc import (FrameStream, MalformedFrame, ReplicaSpec,
+                               heartbeat_loop, engine_cfg_from_wire,
+                               profile_from_wire, to_jsonable, KILL_ALL)
+from repro.serving.policies import ALL_POLICIES
+from repro.serving.queue import Query
+from repro.serving.runtime import Router, WorkerHandle
+
+
+def make_worker_run(work_ms: float):
+    """Echo worker with an optional busy-spin: ``work_ms`` of real CPU
+    per batch stands in for model execution, so the scale-out benchmark
+    measures genuine multi-core parallelism (an inproc cluster's worker
+    threads serialize this spin on the GIL; processes don't)."""
+
+    def run(pareto_idx: int, payloads: List[Any]) -> List[Any]:
+        if work_ms > 0:
+            t_end = time.perf_counter() + work_ms / 1e3
+            while time.perf_counter() < t_end:
+                pass
+        return list(payloads)
+
+    return run
+
+
+def build_router(spec: ReplicaSpec, rid: int) -> Router:
+    profile = profile_from_wire(spec.profile)
+    policy = ALL_POLICIES[spec.policy]()
+    workers = [WorkerHandle(wid=i, run=make_worker_run(spec.work_ms))
+               for i in range(spec.n_workers)]
+    return Router(profile, policy,
+                  workers, engine_cfg=engine_cfg_from_wire(spec.engine_cfg),
+                  replica_id=rid)
+
+
+def _counters(router: Router) -> dict:
+    eng = router.engine
+    return {
+        "n_joins": int(eng.n_joins),
+        "n_switches": int(eng.residency.n_switches),
+        "n_launches": int(eng.residency.n_launches),
+        "actuation_seconds": float(eng.residency.actuation_seconds),
+        "stats": to_jsonable(router.stats()),
+    }
+
+
+async def serve(sock: socket.socket) -> None:
+    reader, writer = await asyncio.open_connection(sock=sock)
+    stream = FrameStream(reader, writer)
+    cfg = await stream.recv()
+    if cfg is None or cfg.get("t") != "config":
+        raise MalformedFrame(f"expected a config frame, got {cfg!r}")
+    spec = ReplicaSpec.from_wire(cfg["spec"])
+    rid = int(cfg.get("rid", 0))
+
+    devices: Optional[int] = None
+    if spec.host_devices:
+        # first jax import in this process: XLA_FLAGS (set by the
+        # parent's env) takes effect here and nowhere earlier
+        import jax
+        devices = len(jax.devices())
+
+    router = build_router(spec, rid)
+    await router.start()
+    await stream.send({"t": "hello", "rid": rid, "pid": os.getpid(),
+                       "n_workers": spec.n_workers, "devices": devices})
+
+    hb = asyncio.create_task(heartbeat_loop(stream, spec.heartbeat_s))
+    inflight: set = set()
+
+    async def run_one(frame: dict) -> None:
+        now = router.clock.now()
+        q = Query(deadline=now + float(frame["slo"]), seq=0, arrival=now,
+                  qid=int(frame["qid"]))
+        fut = await router.submit_query(q, frame.get("payload"))
+        pred, acc = await fut
+        await stream.send({
+            "t": "completion", "qid": q.qid,
+            "dropped": bool(q.dropped), "timed_out": bool(q.timed_out),
+            "acc": None if q.dropped else float(acc),
+            "latency": (q.finish - q.arrival
+                        if q.finish is not None else None),
+            "pred": to_jsonable(pred)})
+
+    try:
+        while True:
+            frame = await stream.recv()
+            if frame is None:
+                break                   # parent gone: exit quietly
+            t = frame["t"]
+            if t == "submit":
+                task = asyncio.create_task(run_one(frame))
+                inflight.add(task)
+                task.add_done_callback(inflight.discard)
+            elif t == "kill":
+                wid = int(frame.get("wid", KILL_ALL))
+                wids = ([w.wid for w in router.workers]
+                        if wid == KILL_ALL else [wid])
+                for w in wids:
+                    router.kill_worker(w)
+            elif t == "stats":
+                await stream.send({"t": "stats",
+                                   "counters": _counters(router)})
+            elif t == "drain":
+                await router.drain(float(frame.get("timeout", 10.0)))
+                # flush every pending completion before acking the drain
+                if inflight:
+                    await asyncio.gather(*list(inflight),
+                                         return_exceptions=True)
+                await stream.send({"t": "drained",
+                                   "counters": _counters(router)})
+                break
+            # unknown kinds are ignored: additive protocol evolution
+    finally:
+        hb.cancel()
+        stream.close()
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    p = argparse.ArgumentParser(
+        description="serve one replica group over an inherited socket")
+    p.add_argument("--fd", type=int, required=True,
+                   help="inherited socketpair fd connected to the "
+                        "coordinator process")
+    args = p.parse_args(argv)
+    sock = socket.socket(fileno=args.fd)
+    asyncio.run(serve(sock))
+
+
+if __name__ == "__main__":
+    main()

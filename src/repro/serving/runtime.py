@@ -178,6 +178,14 @@ class Router:
         sq = self._payloads.pop(q.qid, None)
         if sq is not None and not sq.done.done():
             sq.done.set_result((None, 0.0))
+        if sq is not None and not self._payloads:
+            # a drop may be the event that resolves the last outstanding
+            # query (e.g. the whole queue expired): wake an event-driven
+            # drain() waiting on the _work condition
+            try:
+                asyncio.get_running_loop().create_task(self._notify())
+            except RuntimeError:
+                pass                    # no loop: nothing waits
 
     async def _schedule_loop(self):
         while True:
@@ -262,9 +270,26 @@ class Router:
             self._work.notify_all()
 
     async def drain(self, timeout: float = 10.0):
-        t0 = time.perf_counter()
-        while self._payloads and time.perf_counter() - t0 < timeout:
-            await asyncio.sleep(0.01)
+        """Wait for every outstanding query to resolve, then shut the
+        schedule loop down. Event-driven: waits on the ``_work``
+        condition (notified at batch completion and at emptying drops),
+        so the drain wakes the instant the last query resolves instead
+        of sleep-polling up to 10 ms past it. Queries still unresolved
+        when ``timeout`` expires are resolved as dropped AND marked
+        ``timed_out`` — the shutdown-loss path, distinct from the
+        policy's infeasible drops."""
+        deadline = time.perf_counter() + timeout
+        async with self._work:
+            while self._payloads:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                try:
+                    await asyncio.wait_for(self._work.wait(),
+                                           timeout=remaining)
+                except asyncio.TimeoutError:
+                    break
+        expired = bool(self._payloads)
         self._closed = True
         async with self._work:
             self._work.notify_all()
@@ -275,6 +300,7 @@ class Router:
         self.engine.abandon_pending()
         for sq in self._payloads.values():
             sq.query.dropped = True
+            sq.query.timed_out = expired
             if not sq.done.done():
                 sq.done.set_result((None, 0.0))
         self._payloads.clear()
@@ -288,6 +314,8 @@ class Router:
 
     def stats(self) -> Dict[str, float]:
         st = self.engine.stats()
+        st["timed_out"] = float(sum(1 for q in self.engine.queries
+                                    if q.timed_out))
         if self.executor is not None:
             st["executor"] = self.executor.counters()
         return st
@@ -347,6 +375,25 @@ class ClusterRouter:
     shared virtual heap for parity with ``simulate_cluster``.
     """
 
+    # consecutive live-autoscale tick failures tolerated before the
+    # control loop re-raises (scaling dead, not unlucky)
+    AUTOSCALE_MAX_CONSEC = 3
+
+    def __new__(cls, *args, **kwargs):
+        # transport switch: "inproc" (default) keeps every replica in
+        # this process; "proc" dispatches to serving/ipc.py's
+        # ProcClusterRouter — one OS process per replica group behind
+        # the IPC front door, same public surface, same coordinator
+        # ownership of admission/placement/lifecycle.
+        transport = kwargs.get("transport", "inproc")
+        if transport not in ("inproc", "proc"):
+            raise ValueError(f"unknown transport {transport!r}; "
+                             f"choose from ['inproc', 'proc']")
+        if cls is ClusterRouter and transport == "proc":
+            from repro.serving.ipc import ProcClusterRouter
+            return object.__new__(ProcClusterRouter)
+        return object.__new__(cls)
+
     def __init__(self, profile: LatencyProfile, policy: Policy,
                  replicas: Sequence[Sequence[WorkerHandle]],
                  clock=None, engine_cfg: Optional[EngineConfig] = None,
@@ -355,7 +402,11 @@ class ClusterRouter:
                  worker_factory: Optional[Callable[[int],
                                           List[WorkerHandle]]] = None,
                  slo: float = 0.036,
-                 forecast: Optional[ForecastConfig] = None):
+                 forecast: Optional[ForecastConfig] = None,
+                 transport: str = "inproc", **_proc_only):
+        if _proc_only:
+            raise TypeError("arguments only valid with transport='proc': "
+                            f"{sorted(_proc_only)}")
         # ``slo`` is the deadline regime the autoscaler's thresholds
         # normalize to (when AutoscaleConfig.slo is None) — match the
         # slo_s you submit/run_virtual with, as simulate_cluster's
@@ -378,6 +429,7 @@ class ClusterRouter:
         self._qid = 0
         self._started = False
         self._scale_task: Optional[asyncio.Task] = None
+        self._autoscale_errors = 0
         # autoscaling: spawned replica groups come from worker_factory
         # (default: spawn_workers clones of the first group's run fn,
         # wids 0..k-1 to mirror the simulator's spawned pools)
@@ -433,9 +485,14 @@ class ClusterRouter:
         """Live control loop (wall clock): the asyncio twin of the
         SCALE/READY events drive_cluster puts on the virtual heap. A
         failing tick must not silently end autoscaling for the rest of
-        the run, so errors are reported and the loop keeps going."""
+        the run, so single errors are counted
+        (``stats()['autoscale_errors']``), reported, and the loop keeps
+        going — but ``AUTOSCALE_MAX_CONSEC`` consecutive failures mean
+        the control loop is dead, not unlucky, and the exception is
+        re-raised instead of scaling silently going dark."""
         cfg = self.autoscaler.cfg
         loop = asyncio.get_running_loop()
+        consecutive = 0
         while True:
             await asyncio.sleep(cfg.interval)
             try:
@@ -447,8 +504,13 @@ class ClusterRouter:
                             self._activate, ev.rid)
                     # decommission: tick already re-routed the queue
                     # and migrated payloads/futures via _migrate
+                consecutive = 0
             except Exception:           # noqa: BLE001 — keep scaling alive
                 traceback.print_exc()
+                self._autoscale_errors += 1
+                consecutive += 1
+                if consecutive >= self.AUTOSCALE_MAX_CONSEC:
+                    raise
 
     def _activate(self, rid: int):
         """Cold start paid: the spawned replica becomes routable (a
@@ -576,6 +638,8 @@ class ClusterRouter:
                                       for e in self.coord.engines))
         else:
             st = self.coord.stats()
+        if self.autoscaler is not None:
+            st["autoscale_errors"] = float(self._autoscale_errors)
         snap = self.coord.forecast_snapshot(self.clock.now())
         if snap is not None:
             st["forecast"] = snap

@@ -1,0 +1,344 @@
+"""Multi-process serving plane (serving/ipc.py + replica_proc.py).
+
+Three layers pinned here:
+  * the wire protocol — length-prefixed JSON framing, monotonic
+    sequence numbers, and the full FrameError taxonomy (truncated /
+    malformed / oversized / out-of-order), on the shared sync decoder;
+  * the spec boundary — LatencyProfile / EngineConfig survive the wire
+    round trip with scheduling behavior intact;
+  * the transport — a proc cluster reproduces the inproc
+    ClusterRouter's completion records record-for-record on a
+    deterministic paced trace (modulo wall-clock latencies), and
+    replica-process death (out-of-band SIGKILL -> dead-peer detection,
+    and the kill_replica API) drains and re-routes through the
+    coordinator's existing redistribute path."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving import policies, profiler
+from repro.serving.engine import EngineConfig, VirtualClock
+from repro.serving.ipc import (FrameDecoder, FrameError, MalformedFrame,
+                               OutOfOrderFrame, OversizedFrame,
+                               ProcClusterRouter, TruncatedFrame,
+                               encode_frame, engine_cfg_from_wire,
+                               engine_cfg_to_wire, profile_from_wire,
+                               profile_to_wire, to_jsonable)
+from repro.serving.runtime import ClusterRouter, WorkerHandle
+
+PROF = profiler.build_profile(get_config("ofa_resnet"))
+
+
+# --------------------------------------------------------------------------
+# Wire protocol: framing + error taxonomy (sync decoder, no sockets)
+# --------------------------------------------------------------------------
+
+
+class TestFraming:
+    def test_roundtrip_many_frames_one_feed(self):
+        frames = [{"t": "submit", "qid": i, "payload": [i, i + 1]}
+                  for i in range(5)]
+        wire = b"".join(encode_frame(f, seq=i)
+                        for i, f in enumerate(frames))
+        dec = FrameDecoder()
+        out = dec.feed(wire)
+        assert [f["qid"] for f in out] == list(range(5))
+        assert [f["seq"] for f in out] == list(range(5))
+        dec.eof()                       # clean boundary: no error
+
+    def test_byte_at_a_time_reassembly(self):
+        wire = encode_frame({"t": "stats"}, seq=0)
+        dec = FrameDecoder()
+        out = []
+        for i in range(len(wire)):
+            out.extend(dec.feed(wire[i:i + 1]))
+        assert len(out) == 1 and out[0]["t"] == "stats"
+
+    def test_truncated_frame_detected_at_eof(self):
+        wire = encode_frame({"t": "completion", "qid": 3}, seq=0)
+        dec = FrameDecoder()
+        assert dec.feed(wire[:-2]) == []
+        with pytest.raises(TruncatedFrame):
+            dec.eof()
+
+    def test_truncated_header_detected_at_eof(self):
+        dec = FrameDecoder()
+        assert dec.feed(b"\x00\x00") == []
+        with pytest.raises(TruncatedFrame):
+            dec.eof()
+
+    def test_malformed_json_body(self):
+        body = b"{not json!"
+        wire = len(body).to_bytes(4, "big") + body
+        with pytest.raises(MalformedFrame):
+            FrameDecoder().feed(wire)
+
+    def test_malformed_non_object_body(self):
+        body = b"[1,2,3]"
+        wire = len(body).to_bytes(4, "big") + body
+        with pytest.raises(MalformedFrame):
+            FrameDecoder().feed(wire)
+
+    def test_malformed_missing_seq(self):
+        body = b'{"t":"submit"}'
+        wire = len(body).to_bytes(4, "big") + body
+        with pytest.raises(MalformedFrame):
+            FrameDecoder().feed(wire)
+
+    def test_oversized_declared_length(self):
+        wire = (1 << 30).to_bytes(4, "big")
+        with pytest.raises(OversizedFrame):
+            FrameDecoder().feed(wire)
+
+    def test_oversized_encode_refused(self):
+        with pytest.raises(OversizedFrame):
+            encode_frame({"t": "submit", "payload": "x" * 64}, seq=0,
+                         max_frame=32)
+
+    def test_out_of_order_sequence(self):
+        dec = FrameDecoder()
+        dec.feed(encode_frame({"t": "heartbeat"}, seq=0))
+        with pytest.raises(OutOfOrderFrame):
+            dec.feed(encode_frame({"t": "heartbeat"}, seq=2))
+
+    def test_replayed_sequence(self):
+        dec = FrameDecoder()
+        dec.feed(encode_frame({"t": "heartbeat"}, seq=0))
+        with pytest.raises(OutOfOrderFrame):
+            dec.feed(encode_frame({"t": "heartbeat"}, seq=0))
+
+    def test_taxonomy_is_frame_error(self):
+        for exc in (TruncatedFrame, MalformedFrame, OversizedFrame,
+                    OutOfOrderFrame):
+            assert issubclass(exc, FrameError)
+
+    def test_to_jsonable_numpy(self):
+        out = to_jsonable({"a": np.float64(1.5), "b": np.arange(3),
+                           "c": [np.int32(2)]})
+        assert out == {"a": 1.5, "b": [0, 1, 2], "c": [2]}
+
+
+# --------------------------------------------------------------------------
+# Spec boundary: profile / engine config survive the wire
+# --------------------------------------------------------------------------
+
+
+class TestSpecWire:
+    def test_profile_roundtrip_preserves_scheduling(self):
+        prof2 = profile_from_wire(profile_to_wire(PROF))
+        assert prof2.arch == PROF.arch
+        np.testing.assert_allclose(prof2.accs, PROF.accs)
+        np.testing.assert_allclose(prof2.lat, PROF.lat)
+        assert prof2.batches == PROF.batches
+        # the bucket structure (what SlackFit schedules from) rebuilds
+        # identically from the wire fields
+        for slack in (0.001, 0.01, 0.036, 0.1):
+            assert (prof2.choose_slackfit(slack, 8)
+                    == PROF.choose_slackfit(slack, 8))
+        # residency's switch-cost inputs survive too
+        assert [p.weight_mb for p in prof2.points] == \
+            [p.weight_mb for p in PROF.points]
+
+    def test_engine_cfg_roundtrip(self):
+        cfg = EngineConfig(continuous_batching=True, max_join_window=0.5,
+                           load_on_switch=True)
+        cfg2 = engine_cfg_from_wire(engine_cfg_to_wire(cfg))
+        assert cfg2 == cfg
+        assert engine_cfg_from_wire(engine_cfg_to_wire(None)) is None
+
+
+# --------------------------------------------------------------------------
+# Transport switch plumbing
+# --------------------------------------------------------------------------
+
+
+def _groups(n_replicas, workers_per_replica):
+    return [[WorkerHandle(wid=i, run=lambda idx, p: list(p))
+             for i in range(workers_per_replica)]
+            for _ in range(n_replicas)]
+
+
+class TestTransportSwitch:
+    def test_proc_transport_dispatches_subclass(self):
+        r = ClusterRouter(PROF, policies.MaxAcc(), [1, 1], transport="proc")
+        assert isinstance(r, ProcClusterRouter)
+        assert isinstance(r, ClusterRouter)
+
+    def test_unknown_transport_rejected(self):
+        with pytest.raises(ValueError, match="transport"):
+            ClusterRouter(PROF, policies.MaxAcc(), [1], transport="tcp")
+
+    def test_inproc_rejects_proc_only_kwargs(self):
+        with pytest.raises(TypeError, match="work_ms"):
+            ClusterRouter(PROF, policies.SlackFit(), _groups(1, 1),
+                          work_ms=5.0)
+
+    def test_proc_rejects_autoscale(self):
+        from repro.serving.autoscaler import AutoscaleConfig
+        with pytest.raises(ValueError, match="autoscaler"):
+            ClusterRouter(PROF, policies.MaxAcc(), [1], transport="proc",
+                          autoscale=AutoscaleConfig())
+
+    def test_proc_rejects_virtual_clock(self):
+        with pytest.raises(ValueError, match="wall-clock"):
+            ClusterRouter(PROF, policies.MaxAcc(), [1], transport="proc",
+                          clock=VirtualClock())
+
+    def test_proc_run_virtual_unsupported(self):
+        r = ClusterRouter(PROF, policies.MaxAcc(), [1], transport="proc")
+        with pytest.raises(NotImplementedError):
+            r.run_virtual([0.0], slo_s=0.036)
+
+
+# --------------------------------------------------------------------------
+# Proc-transport parity + death (real subprocesses)
+# --------------------------------------------------------------------------
+
+N_Q = 24
+SLO = 10.0                              # generous: no wall-clock drops
+PACE = 0.004
+
+
+def _key(recs):
+    """The timing-insensitive completion signature: which queries were
+    served/dropped, at which accuracy, on which replica. Wall-clock
+    fields (arrival/finish) are excluded by design — that's the
+    'modulo wall-clock latencies' in the parity bar."""
+    return sorted((r.qid, r.dropped,
+                   None if r.served_acc is None
+                   else round(float(r.served_acc), 9), r.replica)
+                  for r in recs)
+
+
+async def _run_paced(router):
+    await router.start()
+    futs = []
+    for i in range(N_Q):
+        futs.append(await router.submit([float(i)], slo_s=SLO))
+        await asyncio.sleep(PACE)
+    results = await asyncio.gather(*futs)
+    await router.drain(30.0)
+    return router.records(), results
+
+
+class TestProcParity:
+    def test_records_match_inproc(self):
+        """Acceptance bar: record-for-record completion parity between
+        the proc and inproc transports on a deterministic paced trace
+        (maxacc + round_robin: accuracy and placement are independent
+        of wall-clock batching, so the signature is deterministic)."""
+        recs_in, _ = asyncio.run(_run_paced(
+            ClusterRouter(PROF, policies.MaxAcc(), _groups(2, 2))))
+        recs_proc, results = asyncio.run(_run_paced(
+            ClusterRouter(PROF, policies.MaxAcc(), [2, 2],
+                          transport="proc")))
+        assert len(recs_proc) == N_Q
+        assert _key(recs_proc) == _key(recs_in)
+        # every future resolved with the served accuracy
+        assert all(acc > 0 for _, acc in results)
+        # both replicas actually served (round robin over 2)
+        assert {r.replica for r in recs_proc} == {0, 1}
+
+    def test_payloads_echo_through_the_wire(self):
+        recs, results = asyncio.run(_run_paced(
+            ClusterRouter(PROF, policies.MaxAcc(), [1, 1],
+                          transport="proc")))
+        for i, (pred, _) in enumerate(results):
+            assert pred == [float(i)]
+
+
+class TestProcDeath:
+    def test_process_kill_drains_and_reroutes(self):
+        """Out-of-band SIGKILL of a replica process: dead-peer
+        detection (EOF on its stream) must push its pending queries
+        through ClusterCoordinator.redistribute to the survivor — every
+        query still resolves, and the orphans finish on replica 1."""
+        async def main():
+            router = ClusterRouter(PROF, policies.MaxAcc(), [1, 1],
+                                   transport="proc", work_ms=150.0)
+            await router.start()
+            futs = [await router.submit([float(i)], slo_s=30.0)
+                    for i in range(8)]
+            await asyncio.sleep(0.08)   # replica 0 is mid-batch
+            router._chans[0].proc.kill()
+            await asyncio.gather(*futs)
+            await router.drain(60.0)
+            return router
+        router = asyncio.run(main())
+        recs = router.records()
+        assert len(recs) == 8
+        assert all(not r.dropped for r in recs)     # conservation
+        assert not router.coord.alive[0]
+        # round robin sent the even qids to replica 0; the ones still
+        # pending at the kill must have been re-routed to replica 1
+        assert any(r.qid % 2 == 0 and r.replica == 1 for r in recs)
+
+    def test_kill_replica_api(self):
+        """Coordinator-initiated death (the kill_replica surface) takes
+        the same redistribute path, synchronously."""
+        async def main():
+            router = ClusterRouter(PROF, policies.MaxAcc(), [1, 1],
+                                   transport="proc", work_ms=100.0)
+            await router.start()
+            futs = [await router.submit([float(i)], slo_s=30.0)
+                    for i in range(6)]
+            await asyncio.sleep(0.05)
+            router.kill_replica(0)
+            assert not router.coord.alive[0]        # immediate, not EOF
+            await asyncio.gather(*futs)
+            await router.drain(60.0)
+            return router
+        router = asyncio.run(main())
+        recs = router.records()
+        assert len(recs) == 6 and all(not r.dropped for r in recs)
+        assert any(r.qid % 2 == 0 and r.replica == 1 for r in recs)
+
+    def test_total_cluster_death_drops_resolve(self):
+        """Every replica dead: redistribute has nowhere to route — the
+        orphans drop, their futures still resolve (no hang)."""
+        async def main():
+            router = ClusterRouter(PROF, policies.MaxAcc(), [1],
+                                   transport="proc", work_ms=200.0)
+            await router.start()
+            futs = [await router.submit([1.0], slo_s=30.0)
+                    for _ in range(4)]
+            await asyncio.sleep(0.05)
+            router.kill_replica(0)
+            results = await asyncio.gather(*futs)
+            # dead cluster: further admissions drop immediately
+            late = await (await router.submit([9.0], slo_s=30.0))
+            await router.drain(5.0)
+            return router, results, late
+        router, results, late = asyncio.run(main())
+        assert late == (None, 0.0)
+        assert len(results) == 4        # every future resolved, no hang
+        recs = router.records()
+        assert len(recs) == 5
+        assert all(r.dropped or r.finish is not None for r in recs)
+        assert any(r.dropped for r in recs)     # the orphans did drop
+
+
+class TestHostDevicePinning:
+    def test_child_sees_forced_device_count(self):
+        """The XLA_FLAGS fake-device idiom: the spec pins N host
+        devices, the parent env carries the flag, and the child's first
+        jax import reports exactly N devices — multi-device CI on CPU,
+        no TPUs."""
+        async def main():
+            router = ClusterRouter(PROF, policies.MaxAcc(), [1],
+                                   transport="proc", host_devices=3)
+            await router.start()
+            hello = router._chans[0].hello
+            await router.drain(10.0)
+            return hello
+        hello = asyncio.run(main())
+        assert hello["devices"] == 3
+
+    def test_host_devices_env_flag(self):
+        from repro.compat import host_devices_env
+        env = host_devices_env(4)
+        assert "--xla_force_host_platform_device_count=4" in env["XLA_FLAGS"]
+        assert env["JAX_PLATFORMS"] == "cpu"
+        assert "XLA_FLAGS" not in host_devices_env(0)

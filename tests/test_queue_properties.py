@@ -37,6 +37,43 @@ def test_edf_equal_deadline_ties_pop_fifo(deadlines):
         assert qids == sorted(qids)              # insertion order, stable
 
 
+@given(st.lists(st.sampled_from([0.1, 0.2, 0.3]), min_size=2, max_size=40),
+       st.lists(st.sampled_from([0.1, 0.2, 0.3]), min_size=1, max_size=10))
+@settings(max_examples=60, deadline=None)
+def test_repushed_query_keeps_fifo_position(deadlines, late_deadlines):
+    """The re-push invariant (fault re-enqueue / replica-death
+    re-route): a query popped and pushed back — even into a DIFFERENT
+    queue — keeps its first-assigned seq, so among equal deadlines it
+    still pops before every later arrival. The historical bug
+    unconditionally reassigned ``seq`` on push, sending re-enqueued
+    queries behind arrivals they preceded."""
+    src = EDFQueue()
+    for i, d in enumerate(deadlines):
+        src.push(Query(deadline=d, seq=0, arrival=0.0, qid=i))
+    # redistribute: drain the dead queue (EDF order, as surrender_queue
+    # does) and re-push everything into the survivor in one pass —
+    # arrivals never interleave inside a redistribution (the coordinator
+    # loop is synchronous on both transports)
+    dst = EDFQueue()
+    for q2 in src.drain():
+        dst.push(q2)
+    # later arrivals land on the survivor after the re-routed queries
+    for j, d in enumerate(late_deadlines):
+        dst.push(Query(deadline=d, seq=0, arrival=1.0, qid=1000 + j))
+    popped = [dst.pop() for _ in range(len(dst))]
+    assert [p.deadline for p in popped] == sorted(p.deadline for p in popped)
+    for d in {p.deadline for p in popped}:
+        qids = [p.qid for p in popped if p.deadline == d]
+        originals = [i for i in qids if i < 1000]
+        late = [i for i in qids if i >= 1000]
+        # every original (re-routed or not) precedes every equal-deadline
+        # late arrival, and originals stay in admission order
+        assert originals == sorted(originals)
+        if originals and late:
+            assert max(qids.index(i) for i in originals) < \
+                min(qids.index(i) for i in late)
+
+
 @given(st.lists(st.floats(0.0, 10.0), min_size=1, max_size=40),
        st.floats(0.5, 5.0))
 @settings(max_examples=40, deadline=None)

@@ -193,3 +193,144 @@ def test_predictive_joins_in_runtime(served_supernet):
     # windows opened with NO spare worker, and arrivals joined them
     assert router.engine.n_predictive_windows >= 1
     assert router.engine.n_joins >= 1
+
+
+# -- transport bugfixes (ISSUE 9 satellites) --------------------------------
+#
+# These run on the analytic profile (no supernet needed): they exercise
+# the shutdown-loss and control-loop paths of the runtime itself.
+
+from repro.configs import get_config                          # noqa: E402
+from repro.serving.autoscaler import AutoscaleConfig          # noqa: E402
+
+PROF_ANALYTIC = profiler.build_profile(get_config("ofa_resnet"))
+
+
+def _echo_workers(n):
+    return [runtime.WorkerHandle(wid=i, run=lambda idx, p: list(p))
+            for i in range(n)]
+
+
+def test_drain_timeout_marks_timed_out_distinct_from_policy_drops():
+    """Shutdown loss vs policy loss: a query the policy drops as
+    infeasible has ``dropped`` set but NOT ``timed_out``; a query still
+    unresolved when drain's timeout expires gets BOTH, and
+    ``stats()['timed_out']`` counts only the latter."""
+
+    async def main():
+        router = runtime.Router(PROF_ANALYTIC, policies.MaxAcc(),
+                                _echo_workers(1))
+        await router.start()
+        # (a) policy drop: sub-min-service slack is infeasible at dispatch
+        f_bad = await router.submit([1.0], slo_s=1e-9)
+        assert await f_bad == (None, 0.0)
+        # (b) shutdown loss: kill the only worker, then queue a feasible
+        # query — no capacity ever frees, so only drain can resolve it
+        router.kill_worker(0)
+        f_stuck = await router.submit([2.0], slo_s=30.0)
+        t0 = asyncio.get_running_loop().time()
+        await router.drain(timeout=0.2)
+        dt = asyncio.get_running_loop().time() - t0
+        assert await f_stuck == (None, 0.0)
+        return router, dt
+
+    router, dt = asyncio.run(main())
+    assert 0.15 < dt < 5.0              # waited the timeout, not 10 s
+    st = router.stats()
+    assert st["timed_out"] == 1.0
+    by_qid = {q.qid: q for q in router.engine.queries}
+    assert by_qid[0].dropped and not by_qid[0].timed_out   # policy drop
+    assert by_qid[1].dropped and by_qid[1].timed_out       # shutdown loss
+    recs = router.records()
+    assert sorted(r.qid for r in recs) == [0, 1]
+    assert all(r.dropped for r in recs)
+
+
+def test_drain_event_driven_returns_promptly():
+    """The drain is event-driven: with every query already resolved it
+    returns in far less than its (generous) timeout, and resolution of
+    the LAST in-flight query wakes it instead of a sleep-poll cycle."""
+
+    async def main():
+        router = runtime.Router(PROF_ANALYTIC, policies.MaxAcc(),
+                                _echo_workers(2))
+        await router.start()
+        futs = [await router.submit([float(i)], slo_s=10.0)
+                for i in range(8)]
+        await asyncio.gather(*futs)
+        t0 = asyncio.get_running_loop().time()
+        await router.drain(timeout=30.0)
+        return router, asyncio.get_running_loop().time() - t0
+
+    router, dt = asyncio.run(main())
+    assert dt < 5.0                     # nowhere near the 30 s timeout
+    st = router.stats()
+    assert st["served"] == 8
+    assert st["timed_out"] == 0.0
+
+
+def test_autoscale_tick_errors_counted_and_loop_survives_one():
+    """A single failing autoscale tick must not silently end scaling:
+    the error is counted in ``stats()['autoscale_errors']`` and the
+    control loop keeps ticking (the next good tick resets the
+    consecutive counter, so the task stays alive)."""
+
+    async def main():
+        router = runtime.ClusterRouter(
+            PROF_ANALYTIC, policies.SlackFit(), [_echo_workers(1)],
+            autoscale=AutoscaleConfig(interval=0.01, max_replicas=2))
+        await router.start()
+        real_tick = router.autoscaler.tick
+        calls = {"n": 0}
+
+        def flaky_tick(now):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise RuntimeError("transient tick failure")
+            return real_tick(now)
+
+        router.autoscaler.tick = flaky_tick
+        for _ in range(200):
+            await asyncio.sleep(0.01)
+            if calls["n"] >= 3:
+                break
+        alive = not router._scale_task.done()
+        st = router.stats()
+        await router.drain(timeout=5.0)
+        return st, alive
+
+    st, alive = asyncio.run(main())
+    assert st["autoscale_errors"] == 1.0
+    assert alive                        # one bad tick didn't kill the loop
+
+
+def test_autoscale_consecutive_failures_reraise():
+    """AUTOSCALE_MAX_CONSEC consecutive tick failures mean the control
+    loop is dead, not unlucky: the loop re-raises (the task finishes
+    with the exception) instead of scaling silently going dark, and
+    every failure was counted on the way down."""
+
+    async def main():
+        router = runtime.ClusterRouter(
+            PROF_ANALYTIC, policies.SlackFit(), [_echo_workers(1)],
+            autoscale=AutoscaleConfig(interval=0.01, max_replicas=2))
+        await router.start()
+
+        def dead_tick(now):
+            raise RuntimeError("scaling is dead")
+
+        router.autoscaler.tick = dead_tick
+        for _ in range(500):
+            await asyncio.sleep(0.01)
+            if router._scale_task.done():
+                break
+        task = router._scale_task
+        exc = task.exception() if task.done() else None
+        st = router.stats()
+        await router.drain(timeout=5.0)
+        return st, exc
+
+    st, exc = asyncio.run(main())
+    assert isinstance(exc, RuntimeError)
+    assert st["autoscale_errors"] == float(
+        runtime.ClusterRouter.AUTOSCALE_MAX_CONSEC)

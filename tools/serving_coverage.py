@@ -43,14 +43,31 @@ TEST_FILES = [
     "tests/test_engine.py",
     "tests/test_executor.py",
     "tests/test_forecast.py",
+    "tests/test_ipc.py",
     "tests/test_metrics.py",
     "tests/test_policies.py",
     "tests/test_queue_properties.py",
     "tests/test_quantize.py",
     "tests/test_residency.py",
     "tests/test_serving.py::TestTraces",
+    # the transport-bugfix tests run on the analytic profile (no
+    # supernet build), so they join the gate even though the rest of
+    # test_runtime.py stays out
+    "tests/test_runtime.py::"
+    "test_drain_timeout_marks_timed_out_distinct_from_policy_drops",
+    "tests/test_runtime.py::test_drain_event_driven_returns_promptly",
+    "tests/test_runtime.py::"
+    "test_autoscale_tick_errors_counted_and_loop_survives_one",
+    "tests/test_runtime.py::test_autoscale_consecutive_failures_reraise",
 ]
 PYTEST_ARGS = ["-k", "not Oracle"]
+# measured from the PARENT process only: stdlib trace cannot cross the
+# process boundary, so the proc transport's child entrypoint
+# (replica_proc.py, exec'd as `python -m` in spawned workers) always
+# reads 0% here despite being exercised end-to-end by every
+# tests/test_ipc.py proc test — exclude it from the denominator rather
+# than let untraceable lines dilute the floor
+EXCLUDE = {"replica_proc.py"}
 
 
 class _TraceOnlyRepo:
@@ -87,6 +104,8 @@ def measure():
 
     report, tot_exec, tot_lines = {}, 0, 0
     for path in sorted(glob.glob(os.path.join(TARGET_DIR, "*.py"))):
+        if os.path.basename(path) in EXCLUDE:
+            continue
         real = os.path.realpath(path)
         executable = set(trace._find_executable_linenos(path))
         hit = executed.get(real, set()) & executable
