@@ -1,13 +1,22 @@
-"""Multi-process serving plane (transport="proc", serving/ipc.py):
-parity with inproc, replica-death conservation over real OS processes,
-and the reason the transport exists — worker compute that is GIL-bound
-inproc runs genuinely parallel across replica processes.
+"""Multi-host serving plane (transport="proc", serving/ipc.py):
+parity with inproc — over socketpairs AND the TCP listener —
+replica-death conservation over real OS processes, live autoscaling of
+replica processes, real-execution children, and the reason the
+transport exists: worker compute that is GIL-bound inproc runs
+genuinely parallel across replica processes.
 
 Cells:
   * parity — identical paced arrivals through an inproc and a proc
     cluster (MaxAcc + round_robin + generous SLO: completion records
     are timing-independent) must produce the same
     (qid, dropped, served_acc, replica) signatures;
+  * TCP loopback — the SAME parity bar with every child dialing the
+    coordinator's TCP listener through the HMAC handshake, plus a
+    bad-token peer bouncing off the front door (handshake_rejects);
+  * autoscale — a scripted spawn/decommission cycle on real replica
+    processes conserves every query and the forked replica serves;
+  * real exec — an execute="real" child builds its SubnetExecutor from
+    the wire spec and returns finite logits rows, not payload echoes;
   * death — SIGKILL one replica process mid-run: the coordinator
     re-routes its queue to survivors and every query still resolves
     exactly once;
@@ -25,9 +34,13 @@ import asyncio
 import sys
 import time
 
+import numpy as np
+
 from benchmarks.common import banner, save, table
 from repro.configs import get_config
 from repro.serving import policies, profiler
+from repro.serving.autoscaler import AutoscaleConfig
+from repro.serving.ipc import PROTOCOL_VERSION, FrameStream, auth_mac
 from repro.serving.runtime import ClusterRouter, WorkerHandle
 from repro.serving.replica_proc import make_worker_run
 
@@ -78,6 +91,98 @@ def run(smoke: bool = False) -> dict:
           f"{'MATCH' if parity else 'MISMATCH'} "
           f"(proc replicas used: {used})")
 
+    # -- 1b) TCP loopback: same parity bar through the listener, plus a
+    # bad-token peer bouncing off the handshake ------------------------
+    async def tcp_run():
+        router = ClusterRouter(prof, policies.MaxAcc(), [2, 2],
+                               transport="proc", listen="127.0.0.1:0")
+        await router.start()
+        # an unauthorized peer dials the live front door mid-serve
+        host, port = router.listen_addr
+        reader, writer = await asyncio.open_connection(host, port)
+        intruder = FrameStream(reader, writer)
+        ch = await intruder.recv()
+        await intruder.send({"t": "auth", "version": PROTOCOL_VERSION,
+                             "mac": auth_mac("WRONG-TOKEN", ch["nonce"])})
+        reply = await asyncio.wait_for(intruder.recv(), timeout=5.0)
+        intruder.close()
+        futs = [await router.submit([float(i)], slo_s=SLO_S)
+                for i in range(n_par)
+                if not await asyncio.sleep(PACE_S)]
+        await asyncio.gather(*futs)
+        await router.drain(60.0)
+        return router.records(), reply, router.handshake_rejects
+
+    recs_tcp, reject, n_rejects = asyncio.run(tcp_run())
+    tcp_parity = _sig(recs_tcp) == _sig(recs_in)
+    bad_token_rejected = (reject is not None
+                          and reject.get("t") == "reject"
+                          and n_rejects == 1)
+    print(f"tcp loopback: parity "
+          f"{'MATCH' if tcp_parity else 'MISMATCH'}, bad token "
+          f"{'rejected' if bad_token_rejected else 'NOT rejected'}")
+
+    # -- 1c) live autoscale over proc: scripted spawn/decommission -----
+    async def autoscale_run():
+        n = 24 if smoke else 40
+        cfg = AutoscaleConfig(min_replicas=1, max_replicas=3,
+                              policy="scripted", interval=0.05,
+                              cooldown=0.0, cold_start=0.05,
+                              spawn_workers=2,
+                              script=((0.15, +1), (n * 0.05, -1)))
+        router = ClusterRouter(prof, policies.MaxAcc(), [2],
+                               transport="proc", autoscale=cfg, slo=SLO_S)
+        await router.start()
+        futs = [await router.submit([float(i)], slo_s=SLO_S)
+                for i in range(n)
+                if not await asyncio.sleep(0.06)]
+        await asyncio.gather(*futs)
+        await router.drain(60.0)
+        return router, n
+
+    as_router, n_as = asyncio.run(autoscale_run())
+    as_recs = as_router.records()
+    as_kinds = [e.kind for e in as_router.autoscaler.events]
+    autoscale = {
+        "n": n_as, "resolved": len(as_recs),
+        "dropped": sum(1 for r in as_recs if r.dropped),
+        "spawned_replica_served": sum(1 for r in as_recs
+                                      if r.replica == 1 and not r.dropped),
+        "event_kinds": sorted(set(as_kinds)),
+    }
+    print(f"autoscale over proc: {autoscale['resolved']}/{n_as} resolved, "
+          f"{autoscale['dropped']} dropped, spawned replica served "
+          f"{autoscale['spawned_replica_served']}, events {as_kinds}")
+
+    # -- 1d) real execution in the child -------------------------------
+    async def real_run():
+        arch = "qwen2-1.5b"
+        rcfg = get_config(arch).reduced()
+        rprof = profiler.build_profile(rcfg)
+        router = ClusterRouter(rprof, policies.MaxAcc(), [1],
+                               transport="proc", execute="real",
+                               arch=arch, seq_len=8, spawn_timeout=300.0)
+        await router.start()
+        rng = np.random.default_rng(0)
+        payloads = rng.integers(0, rcfg.vocab_size, (4, 8))
+        futs = [await router.submit(payloads[i].tolist(), slo_s=60.0)
+                for i in range(4)]
+        results = await asyncio.gather(*futs)
+        await router.drain(60.0)
+        return rcfg, payloads, results, router.records()
+
+    rcfg, rpay, rres, rrecs = asyncio.run(real_run())
+    real_non_echo = all(
+        np.asarray(p, float).shape == (rcfg.vocab_size,)
+        and np.all(np.isfinite(np.asarray(p, float)))
+        and list(map(float, p)) != [float(x) for x in rpay[i]]
+        for i, (p, _) in enumerate(rres))
+    real_resolved = (len(rrecs) == 4
+                     and all(not r.dropped for r in rrecs))
+    print(f"real exec: {len(rrecs)}/4 served, logits rows "
+          f"{'real' if real_non_echo else 'ECHOED?'} "
+          f"(vocab {rcfg.vocab_size})")
+
     # -- 2) replica death: SIGKILL one process mid-run -----------------
     async def death_run():
         router = ClusterRouter(prof, policies.MaxAcc(), [1, 1],
@@ -127,6 +232,17 @@ def run(smoke: bool = False) -> dict:
 
     structural = {
         "proc_records_match_inproc": parity,
+        "tcp_records_match_inproc": tcp_parity,
+        "bad_token_rejected": bad_token_rejected,
+        "autoscale_conserves_queries": (
+            autoscale["resolved"] == autoscale["n"]
+            and autoscale["dropped"] == 0),
+        "autoscale_full_lifecycle": (
+            {"spawn", "ready", "decommission"}
+            <= set(autoscale["event_kinds"])),
+        "autoscaled_replica_served": autoscale["spawned_replica_served"] > 0,
+        "real_exec_non_echo": real_non_echo,
+        "real_exec_all_resolved": real_resolved,
         "every_replica_used": used == [0, 1],
         "all_queries_accounted": (
             len(recs_in) == n_par and len(recs_proc) == n_par
@@ -137,6 +253,12 @@ def run(smoke: bool = False) -> dict:
     perf = {"proc_beats_gil_bound_inproc": speedup >= 1.3}
     claims = dict(structural) if smoke else {**structural, **perf}
     payload = {"parity": {"n": n_par, "match": parity, "replicas_used": used},
+               "tcp": {"match": tcp_parity,
+                       "handshake_rejects": n_rejects},
+               "autoscale": autoscale,
+               "real_exec": {"served": len(rrecs),
+                             "vocab": int(rcfg.vocab_size),
+                             "non_echo": real_non_echo},
                "replica_death": death, "gil_scaleout": timings,
                "speedup": speedup, "work_ms": work_ms, "smoke": smoke,
                "perf_claims_informational": perf if smoke else None,

@@ -19,14 +19,23 @@ fallback without signal); ``--predictive-joins`` opens forecast-led
 join windows even at saturation; ``--forecast-window`` sets the shared
 estimator window. The forecast snapshot rides the output JSON.
 
-Multi-process serving plane (serving/ipc.py): ``--transport proc
+Multi-host serving plane (serving/ipc.py): ``--transport proc
 --procs K`` serves the trace LIVE through K replica worker processes —
 one OS process per replica group behind the IPC front door, placement
-still owned by the in-process coordinator. Echo workers (optionally
-``--work-ms`` of real CPU spin per batch) stand in for model execution;
-arrivals are capped at ``--queries``. Incompatible with ``--execute
-real``, ``--profile measured``, ``--autoscale``, ``--faults`` and
-``--replica-deaths``.
+still owned by the in-process coordinator. ``--listen HOST:PORT`` (port
+0 picks a free one) moves the transport onto TCP with an HMAC-token
+handshake (``--token``, auto-generated when unset), the same front door
+a REMOTE replica dials: run ``--connect HOST:PORT --token T`` on
+another machine to serve as a replica child for that coordinator.
+``--autoscale`` runs the live replica autoscaler over the proc
+transport (spawn = fork/connect a child priced at cold start,
+decommission = drain frame through the coordinator's surrender path),
+and ``--execute real`` makes each child build its own AOT-warmed
+``SubnetExecutor`` so completions carry real subnet logits. Echo
+workers (optionally ``--work-ms`` of real CPU spin per batch) remain
+the default stand-in; arrivals are capped at ``--queries``. Still
+incompatible with ``--profile measured``, ``--faults`` and
+``--replica-deaths`` (fault scripts stay inproc/simulated).
 
 Compiled execution path (serving/executor.py): ``--execute real`` runs
 actual subnet forward passes on this host — the reduced config behind
@@ -127,10 +136,11 @@ def _serve_real(args, cfg, prof, pol, executor, arr, slo_s, rate, warm):
             "warmup": warm, "executor": executor.counters()}
 
 
-def _serve_proc(args, prof, pol, arr, slo_s, rate):
+def _serve_proc(args, cfg, prof, pol, arr, slo_s, rate, autoscale=None):
     """Serve ``arr`` live through one OS process per replica group
-    (serving/ipc.py). The coordinator in THIS process still owns
-    admission/placement/lifecycle; the children own scheduling."""
+    (serving/ipc.py) — socketpair children, or TCP with ``--listen``.
+    The coordinator in THIS process still owns admission/placement/
+    lifecycle (autoscaling included); the children own scheduling."""
     from repro.serving import runtime
 
     async def go():
@@ -139,6 +149,12 @@ def _serve_proc(args, prof, pol, arr, slo_s, rate):
             placement=args.placement, placement_seed=args.seed,
             transport="proc", work_ms=args.work_ms,
             host_devices=args.host_devices,
+            listen=args.listen, token=args.token,
+            execute=args.execute if args.execute == "real" else "echo",
+            arch=args.arch if args.execute == "real" else None,
+            seq_len=args.seq_len, seed=args.seed,
+            autoscale=autoscale, slo=slo_s,
+            spawn_timeout=300.0 if args.execute == "real" else 60.0,
             engine_cfg=(runtime.EngineConfig(
                 continuous_batching=args.continuous_batching
                 or args.predictive_joins,
@@ -148,13 +164,21 @@ def _serve_proc(args, prof, pol, arr, slo_s, rate):
                 if args.continuous_batching or args.predictive_joins
                 else None))
         await router.start()
+        payloads = None
+        if args.execute == "real":
+            rng = np.random.default_rng(args.seed)
+            payloads = rng.integers(
+                0, cfg.vocab_size,
+                (len(arr), args.seq_len)).astype(np.int32)
         t0 = time.perf_counter()
         futs = []
         for i, t in enumerate(arr):
             now = time.perf_counter() - t0
             if t > now:
                 await asyncio.sleep(t - now)
-            futs.append(await router.submit([float(i)], slo_s=slo_s))
+            p = (payloads[i].tolist() if payloads is not None
+                 else [float(i)])
+            futs.append(await router.submit(p, slo_s=slo_s))
         await asyncio.gather(*futs)
         await router.drain(60.0)
         return router, time.perf_counter() - t0
@@ -162,19 +186,37 @@ def _serve_proc(args, prof, pol, arr, slo_s, rate):
     router, makespan = asyncio.run(go())
     st = router.stats()
     recs = router.records()
-    return {"arch": args.arch, "mode": "proc", "policy": pol.name,
-            "queries": len(recs), "procs": args.procs,
-            "workers_per_proc": args.workers, "work_ms": args.work_ms,
-            "rate_qps": round(rate, 1), "slo_ms": round(slo_s * 1e3, 3),
-            "slo_attainment": st["slo_attainment"],
-            "mean_acc": st["mean_acc"],
-            "p50_latency_ms": st["p50_latency_s"] * 1e3,
-            "p99_latency_ms": st["p99_latency_s"] * 1e3,
-            "load_imbalance": st["load_imbalance"],
-            "per_replica_served": {r: v["served"]
-                                   for r, v in st["replicas"].items()},
-            "makespan_s": round(makespan, 4),
-            "replica_pids": [ch.proc.pid for ch in router._chans]}
+    out = {"arch": args.arch, "mode": "proc", "execute": args.execute,
+           "policy": pol.name,
+           "queries": len(recs), "procs": args.procs,
+           "workers_per_proc": args.workers, "work_ms": args.work_ms,
+           "rate_qps": round(rate, 1), "slo_ms": round(slo_s * 1e3, 3),
+           "slo_attainment": st["slo_attainment"],
+           "mean_acc": st["mean_acc"],
+           "p50_latency_ms": st["p50_latency_s"] * 1e3,
+           "p99_latency_ms": st["p99_latency_s"] * 1e3,
+           "load_imbalance": st["load_imbalance"],
+           "per_replica_served": {r: v["served"]
+                                  for r, v in st["replicas"].items()},
+           "makespan_s": round(makespan, 4),
+           # adopted/remote replicas have no local pid
+           "replica_pids": [None if ch.proc is None else ch.proc.pid
+                            for ch in router._chans]}
+    if args.listen:
+        out["listen"] = list(router.listen_addr)
+        out["handshake_rejects"] = router.handshake_rejects
+    if autoscale is not None:
+        router.autoscaler.finalize(router.clock.now())
+        out.update({
+            "autoscale_policy": autoscale.policy,
+            "replicas_total": router.coord.n_replicas,   # ever existed
+            "replica_seconds": round(router.autoscaler.replica_seconds(),
+                                     4),
+            "scale_events": [
+                {"t": round(e.t, 4), "kind": e.kind, "rid": e.rid,
+                 "committed": e.n_committed, "signal": round(e.signal, 3)}
+                for e in router.autoscaler.events]})
+    return out
 
 
 def main():
@@ -243,6 +285,21 @@ def main():
                     help="--transport proc: pin N fake XLA host devices "
                          "per replica process via XLA_FLAGS before the "
                          "child's first jax import (0 = no jax import)")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="--transport proc: open a TCP listener and run "
+                         "children through it (port 0 picks a free one); "
+                         "remote replicas dial the same address with "
+                         "--connect and pass the HMAC handshake")
+    ap.add_argument("--token", default=None,
+                    help="shared HMAC handshake token for --listen/"
+                         "--connect (listener auto-generates one when "
+                         "unset; --connect falls back to $REPRO_IPC_TOKEN)")
+    ap.add_argument("--connect", default=None, metavar="HOST:PORT",
+                    help="run as a REMOTE replica child: dial a "
+                         "coordinator started with --listen and serve "
+                         "one replica group for it (every other flag is "
+                         "ignored — the coordinator's ReplicaSpec "
+                         "configures this process)")
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="query SLO (default 36.0; --execute real "
                          "derives ~25x the max-subnet B=1 latency from "
@@ -287,6 +344,13 @@ def main():
                          "the regime where --placement actuation_aware "
                          "and --policy slackfit_sticky earn their keep")
     args = ap.parse_args()
+    if args.connect:
+        # remote-replica child mode: this process serves frames for a
+        # coordinator elsewhere; its ReplicaSpec arrives over the wire
+        from repro.serving.replica_proc import main as replica_main
+        replica_main(["--connect", args.connect]
+                     + (["--token", args.token] if args.token else []))
+        return
     try:
         cold_start = (None if args.cold_start == "auto"
                       else float(args.cold_start))
@@ -296,12 +360,14 @@ def main():
 
     cfg = get_config(args.arch)
     if args.transport == "proc" and (
-            args.execute == "real" or args.profile_mode == "measured"
-            or args.autoscale or args.faults or args.replica_deaths):
-        ap.error("--transport proc serves echo/spin workers through "
-                 "replica processes; it does not combine with --execute "
-                 "real, --profile measured, --autoscale, --faults or "
-                 "--replica-deaths (ROADMAP multi-host item)")
+            args.profile_mode == "measured"
+            or args.faults or args.replica_deaths):
+        ap.error("--transport proc does not combine with --profile "
+                 "measured, --faults or --replica-deaths (fault scripts "
+                 "and host-measured profiles stay inproc/simulated)")
+    if args.listen and args.transport != "proc":
+        ap.error("--listen is the proc transport's TCP front door; "
+                 "add --transport proc")
     executor, warm = None, None
     if args.execute == "real" or args.profile_mode == "measured":
         if cfg.family == "conv" or cfg.frontend != "token":
@@ -309,14 +375,19 @@ def main():
                      f"LM path and need a token-frontend arch (try "
                      f"--arch qwen2-1.5b); {args.arch} is "
                      f"family={cfg.family}, frontend={cfg.frontend}")
-        if args.execute == "real" and (args.autoscale or args.faults
-                                       or args.replica_deaths):
+        if (args.execute == "real" and args.transport != "proc"
+                and (args.autoscale or args.faults
+                     or args.replica_deaths)):
             ap.error("--execute real does not support --autoscale/"
-                     "--faults/--replica-deaths; use the simulator for "
-                     "fault and scaling studies")
-        from repro.serving.executor import build_executor
+                     "--faults/--replica-deaths inproc; --transport "
+                     "proc runs autoscaled real execution, and the "
+                     "simulator covers fault studies")
         cfg = cfg.reduced()             # CPU-executable twin, same family
-        executor = build_executor(cfg, seed=args.seed)
+        if args.transport != "proc":
+            # proc + real builds executors inside the children (from
+            # the same reduced config); the parent only profiles it
+            from repro.serving.executor import build_executor
+            executor = build_executor(cfg, seed=args.seed)
 
     if args.profile_mode == "measured":
         # AOT-warm first so measurement never times a compile
@@ -341,7 +412,15 @@ def main():
     rate = args.rate if args.rate is not None else 7000.0
     slo_ms = args.slo_ms if args.slo_ms is not None else 36.0
     duration = args.duration
-    if args.execute == "real":
+    if args.execute == "real" and args.transport == "proc":
+        # the children execute; the parent has no executor to time —
+        # size pacing for reduced-config CPU forwards served over IPC
+        if args.rate is None:
+            rate = 20.0
+        if args.slo_ms is None:
+            slo_ms = 4000.0
+        duration = args.queries / max(rate, 1e-9)
+    elif args.execute == "real":
         # host-safe pacing: the analytic roofline models the paper's
         # 2080Ti, not this host — derive rate/SLO from latencies
         # actually observed here (examples/serve_bursty.py sizing:
@@ -365,16 +444,30 @@ def main():
     else:
         arr = traces.maf_like_trace(rate, duration, seed=args.seed)
 
+    if args.transport == "proc":
+        arr = np.asarray(arr, dtype=float)[: args.queries]
+        autoscale = None
+        if args.autoscale:
+            if not (args.min_replicas <= args.procs
+                    <= args.max_replicas):
+                ap.error(f"--procs {args.procs} must start within "
+                         f"[--min-replicas {args.min_replicas}, "
+                         f"--max-replicas {args.max_replicas}]")
+            autoscale = AutoscaleConfig(
+                min_replicas=args.min_replicas,
+                max_replicas=args.max_replicas, policy=args.scale_policy,
+                cold_start=cold_start, cooldown=args.scale_cooldown,
+                **({"rate_window": args.forecast_window}
+                   if args.scale_policy == "predictive" else {}))
+        out = _serve_proc(args, cfg, prof, pol, arr, slo_ms / 1e3, rate,
+                          autoscale)
+        print(json.dumps(out, indent=1))
+        return
+
     if args.execute == "real":
         arr = np.asarray(arr, dtype=float)[: args.queries]
         out = _serve_real(args, cfg, prof, pol, executor, arr,
                           slo_ms / 1e3, rate, warm)
-        print(json.dumps(out, indent=1))
-        return
-
-    if args.transport == "proc":
-        arr = np.asarray(arr, dtype=float)[: args.queries]
-        out = _serve_proc(args, prof, pol, arr, slo_ms / 1e3, rate)
         print(json.dumps(out, indent=1))
         return
 

@@ -39,14 +39,21 @@ sole writer (actuate on launch, forget on death), everything else
 reads; residency-blind configs replay pre-refactor schedules
 bit-for-bit.
 
-Multi-process plane (serving/ipc.py + serving/replica_proc.py):
+Multi-host plane (serving/ipc.py + serving/replica_proc.py):
 ``ClusterRouter(transport="proc")`` runs each replica group as its own
 OS process behind a length-prefixed JSON frame protocol (seq-verified,
-heartbeat dead-peer detection, typed FrameError taxonomy) over an
-inherited socketpair, with XLA host-device pinning via
-compat.host_devices_env. Layering rule: the parent-side coordinator
-keeps sole ownership of admission/placement/lifecycle; children own
-scheduling through a full in-process Router; the transport only
-serializes placement decisions out and completion records back —
-inproc/proc record parity is the gate (tests/test_ipc.py,
+heartbeat dead-peer detection, typed FrameError taxonomy) over either
+an inherited socketpair or a coordinator-side TCP listener with an
+HMAC-token challenge/auth handshake — remote children join via
+``replica_proc --connect`` and are adopted with ``adopt_replica()``.
+The live ClusterAutoscaler drives this transport too (spawn = fork or
+TCP-connect a process, decommission = drain frame through the
+coordinator's surrender path), and ``execute="real"`` children build
+their own AOT-warmed SubnetExecutor so completions carry real
+predictions. XLA host-device pinning via compat.host_devices_env.
+Layering rule: the parent-side coordinator keeps sole ownership of
+admission/placement/lifecycle; children own scheduling through a full
+in-process Router; the transport only serializes placement decisions
+out and completion records back — inproc/proc record parity (over
+both front doors) is the gate (tests/test_ipc.py,
 benchmarks/bench_multiproc.py)."""

@@ -7,9 +7,12 @@ trace's peak, a ``ClusterAutoscaler`` rides on the PR 3
 ``ClusterCoordinator`` and spawns / decommissions whole replica groups
 from live load signals. The division of labor extends PR 2/3's rule:
 *scheduling* lives in the engine, *placement AND scaling* live in the
-coordinator layer — transports (simulator / asyncio cluster router)
-stay thin and drive the same autoscaler through the same coordinator,
-so autoscaled schedules remain transport-independent and deterministic.
+coordinator layer — transports (simulator / asyncio cluster router /
+the proc transport's IPC front door, where ``engine_factory`` returns a
+coordinator-side ``ReplicaProxy`` and spawn means forking a replica
+process) stay thin and drive the same autoscaler through the same
+coordinator, so autoscaled schedules remain transport-independent and
+deterministic.
 
 Lifecycle invariants (property-tested in tests/test_autoscaler.py):
 

@@ -294,7 +294,12 @@ class ClusterCoordinator:
     def add_replica(self, engine: SchedulingEngine,
                     ready: bool = True) -> int:
         """Register a new replica group. ``ready=False`` keeps it
-        unroutable until ``mark_ready`` (the cold-start window)."""
+        unroutable until ``mark_ready`` (the cold-start window). The
+        "engine" only needs the coordinator surface — the proc
+        transport registers ``ReplicaProxy`` stand-ins here, both for
+        autoscaler spawns and for replicas adopted from remote hosts,
+        so placement and lifecycle never notice the process (or host)
+        boundary."""
         rid = len(self.engines)
         self.engines.append(engine)
         self.alive.append(True)

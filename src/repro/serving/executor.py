@@ -62,7 +62,7 @@ from repro.kernels.dispatch import model_tier
 from repro.models import lm
 
 __all__ = ["ExecutorConfig", "SubnetExecutor", "DecodeCache",
-           "bucket_of", "build_executor"]
+           "bucket_of", "build_executor", "build_serving_executor"]
 
 
 def bucket_of(n: int, buckets: Sequence[int]) -> int:
@@ -386,3 +386,20 @@ def build_executor(cfg: ArchConfig, seed: int = 0,
     (the ``launch/serve.py --execute real`` entry point)."""
     params = lm.init_model(jax.random.PRNGKey(seed), cfg)
     return SubnetExecutor(params, cfg, exec_cfg=exec_cfg)
+
+
+def build_serving_executor(arch: str, seq_len: int = 16,
+                           batches: Sequence[int] = (1, 2, 4, 8),
+                           seed: int = 0) -> SubnetExecutor:
+    """Registry-name entry point for serving children
+    (``replica_proc --execute real``): build the supernet executor for
+    ``arch``'s REDUCED config — the CPU-executable twin whose small
+    vocab also keeps per-completion logits safely under the IPC frame
+    cap — and AOT-warm the ``batches`` x ``seq_len`` lattice so the
+    first submit frame never pays an XLA compile. The coordinator must
+    profile the same reduced config for Pareto-set agreement."""
+    from repro.configs import get_config
+    cfg = get_config(arch).reduced()
+    ex = build_executor(cfg, seed=seed)
+    ex.warmup(batches=tuple(batches), seqs=(int(seq_len),))
+    return ex

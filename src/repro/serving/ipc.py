@@ -1,30 +1,53 @@
-"""IPC front door for the multi-process serving plane (ROADMAP
+"""IPC front door for the multi-host serving plane (ROADMAP
 "multi-process, multi-host serving plane").
 
 The inproc ``ClusterRouter`` hosts every replica group in one Python
 process; this module splits the transport so each replica group runs in
 its own OS process (``serving/replica_proc.py`` is the child
-entrypoint) behind a length-prefixed JSON-over-socket protocol:
+entrypoint) — on this host over an inherited socketpair, or on ANY host
+over TCP — behind a length-prefixed JSON-over-socket protocol:
 
   * **frames** — ``config`` / ``hello`` / ``submit`` / ``completion`` /
-    ``kill`` / ``drain`` / ``drained`` / ``stats`` / ``heartbeat``, each
-    a JSON object with a ``t`` kind and a per-direction monotonic
-    ``seq`` (gap or replay -> ``OutOfOrderFrame``); the wire format is
-    a 4-byte big-endian length prefix + UTF-8 JSON body, with a hard
-    frame-size cap (``OversizedFrame``), EOF-mid-frame detection
+    ``kill`` / ``drain`` / ``drained`` / ``stats`` / ``heartbeat``
+    (plus the TCP-only ``challenge`` / ``auth`` / ``reject`` handshake
+    frames), each a JSON object with a ``t`` kind and a per-direction
+    monotonic ``seq`` (gap or replay -> ``OutOfOrderFrame``); the wire
+    format is a 4-byte big-endian length prefix + UTF-8 JSON body, with
+    a hard frame-size cap (``OversizedFrame``), EOF-mid-frame detection
     (``TruncatedFrame``) and body validation (``MalformedFrame``);
+  * **transport** — ``ClusterRouter(transport="proc")`` spawns local
+    children over socketpairs (trusted: the fd is inherited, no
+    handshake); ``listen="HOST:PORT"`` additionally opens a TCP
+    listener, spawns local children through it, and lets REMOTE
+    children (``replica_proc --connect HOST:PORT --token ...``) be
+    *adopted* into the cluster (``adopt_replica``) after an
+    HMAC-SHA256 challenge/response handshake: the coordinator sends a
+    nonce + protocol version, the child answers with
+    ``HMAC(token, nonce:version)``, and a bad/missing token or a
+    version mismatch is rejected (``reject`` frame, counted in
+    ``handshake_rejects``) before any serving frame flows;
   * **dead-peer detection** — children heartbeat on an interval; the
     coordinator's per-replica watchdog (plus EOF/ConnectionError on
     either stream) feeds peer death into the *existing*
     drain-and-re-route path: ``ClusterCoordinator.redistribute`` is
     still THE surrender path (the PR 3 rule), the proc transport just
     re-serializes the orphans to the survivors;
-  * **ownership** — the coordinator process stays the sole owner of
-    admission, placement, and lifecycle. A ``ReplicaProxy`` stands in
-    for the remote engine on the coordinator's placement surface
-    (pending counts, not remote queue state — load-aware placements see
-    the parent's view); the child's ``Router``/engine owns all
-    scheduling *within* the replica, exactly as inproc.
+  * **lifecycle** — the coordinator process stays the sole owner of
+    admission, placement, and lifecycle. The live ``ClusterAutoscaler``
+    (serving/autoscaler.py) rides the proc transport exactly as it
+    rides inproc: spawn = fork/connect a child priced at the usual cold
+    start (routable only after both the handshake AND the cold start
+    complete), decommission = a ``drain`` frame through the
+    coordinator's surrender path — transports never spawn/kill replicas
+    behind the coordinator's back (the PR 4 rule). A ``ReplicaProxy``
+    stands in for the remote engine on the coordinator's placement
+    surface; the child's ``Router``/engine owns all scheduling *within*
+    the replica, exactly as inproc;
+  * **execution** — children serve echo/spin workers by default;
+    ``execute="real"`` makes each child build a ``SubnetExecutor``
+    (serving/executor.py) from the wire spec's arch name, so completion
+    frames carry real subnet logits and measured latencies instead of
+    echoes.
 
 Clock skew never crosses the boundary: a ``submit`` frame carries the
 query's *remaining* SLO, the child recomputes arrival/deadline on its
@@ -32,38 +55,47 @@ own wall clock, and the coordinator stamps the master query's finish at
 completion-frame receipt (end-to-end latency, IPC included).
 
 Parity bar (tests/test_ipc.py, benchmarks/bench_multiproc.py): a proc
-cluster on a deterministic paced trace reproduces the inproc
-``ClusterRouter``'s completion records — same qids served/dropped, same
-served accuracies, same replica assignments — modulo wall-clock
-latencies.
+cluster — socketpair or TCP — on a deterministic paced trace reproduces
+the inproc ``ClusterRouter``'s completion records — same qids
+served/dropped, same served accuracies, same replica assignments —
+modulo wall-clock latencies.
 
-Known limits (also in README "Multi-process serving"): payloads must be
+Known limits (also in README "Multi-host serving"): payloads must be
 JSON-serializable; policies must be registry-constructible by name
-(``ALL_POLICIES[name]()``); no live autoscaler over proc transport yet
-(replica lifecycle = the fixed spawn set + deaths); a completion racing
-a replica kill may be re-served by a survivor (at-least-once on death,
-exactly-once otherwise).
+(``ALL_POLICIES[name]()``); a completion racing a replica kill or a
+graceful decommission may be re-served by a survivor (at-least-once on
+death/decommission, exactly-once otherwise); ``execute="real"``
+requires the coordinator's ``LatencyProfile`` to be built from the SAME
+reduced config the children build (``get_config(arch).reduced()``) so
+both sides agree on the Pareto subnet set.
 """
 from __future__ import annotations
 
 import asyncio
+import hashlib
+import hmac
 import json
+import secrets
 import subprocess
 import sys
 import time
+import traceback
+from collections import deque
 from dataclasses import asdict, dataclass
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.serving.autoscaler import coordinator_forecast
+from repro.serving.autoscaler import (AutoscaleConfig, ClusterAutoscaler,
+                                      coordinator_forecast)
 from repro.serving.cluster import ClusterCoordinator, make_placement
 from repro.serving.engine import EngineConfig, WallClock
 from repro.serving.forecast import ForecastConfig
 from repro.serving.policies import ALL_POLICIES, Policy
 from repro.serving.profiler import HardwareProfile, LatencyProfile
 from repro.serving.queue import Query
+from repro.serving.residency import ActuationModel
 from repro.serving.runtime import ClusterRouter
 
 # -- wire format -----------------------------------------------------------
@@ -73,6 +105,9 @@ MAX_FRAME = 8 << 20                     # 8 MiB: no serving frame is close
 HEARTBEAT_S = 0.25                      # child -> parent liveness interval
 DEAD_AFTER_BEATS = 8                    # missed beats before declared dead
 KILL_ALL = -1                           # kill-frame wid sentinel: whole pool
+PROTOCOL_VERSION = 1                    # bumped on incompatible frame changes
+HANDSHAKE_TIMEOUT_S = 10.0              # challenge -> auth wait on accept
+TOKEN_ENV = "REPRO_IPC_TOKEN"           # token env var (kept off argv/ps)
 
 
 class FrameError(Exception):
@@ -94,6 +129,16 @@ class OversizedFrame(FrameError):
 
 class OutOfOrderFrame(FrameError):
     """Sequence number is not the expected next one (drop or replay)."""
+
+
+def auth_mac(token: str, nonce: str,
+             version: int = PROTOCOL_VERSION) -> str:
+    """The handshake response: HMAC-SHA256 over the server's nonce AND
+    the protocol version, keyed by the shared token — binding the
+    version into the MAC means a version-spoofing auth frame fails the
+    MAC check even before the explicit version comparison."""
+    msg = f"{nonce}:{version}".encode("utf-8")
+    return hmac.new(token.encode("utf-8"), msg, hashlib.sha256).hexdigest()
 
 
 def to_jsonable(x: Any) -> Any:
@@ -198,7 +243,10 @@ class FrameStream:
         self._tx_seq = 0
         self._tx_lock = asyncio.Lock()
         self._decoder = FrameDecoder(max_frame=max_frame)
-        self._pending: List[Dict[str, Any]] = []
+        # a deque, not a list: one read() burst can finish hundreds of
+        # frames under bursty traffic, and popping a list head is O(n)
+        # per frame — O(n^2) per burst
+        self._pending: Deque[Dict[str, Any]] = deque()
         self.last_rx = time.monotonic()     # watchdog signal (any bytes)
 
     async def send(self, frame: Dict[str, Any]) -> None:
@@ -218,7 +266,7 @@ class FrameStream:
                 return None
             self.last_rx = time.monotonic()
             self._pending.extend(self._decoder.feed(chunk))
-        return self._pending.pop(0)
+        return self._pending.popleft()
 
     def close(self) -> None:
         try:
@@ -228,11 +276,25 @@ class FrameStream:
 
 
 async def heartbeat_loop(stream: FrameStream,
-                         interval: float = HEARTBEAT_S) -> None:
-    """Child-side liveness beacon; cancelled at shutdown."""
+                         interval: float = HEARTBEAT_S,
+                         errors: Optional[Dict[str, int]] = None) -> None:
+    """Child-side liveness beacon; cancelled at shutdown.
+
+    A send that hits a dead/backpressured connection must NOT die with
+    an unobserved exception — the child would silently stop beating
+    while still serving, and the parent's watchdog would declare a live
+    replica dead after ``DEAD_AFTER_BEATS``. Connection failures end
+    the loop cleanly instead, counted into ``errors`` (surfaced through
+    the child's ``stats`` counters as ``heartbeat_send_errors``)."""
     while True:
         await asyncio.sleep(interval)
-        await stream.send({"t": "heartbeat", "now": time.monotonic()})
+        try:
+            await stream.send({"t": "heartbeat", "now": time.monotonic()})
+        except (ConnectionError, OSError, RuntimeError):
+            if errors is not None:
+                errors["heartbeat_send_errors"] = (
+                    errors.get("heartbeat_send_errors", 0) + 1)
+            return
 
 
 # -- replica spec (what crosses the process boundary at spawn) -------------
@@ -295,9 +357,12 @@ def engine_cfg_from_wire(d: Optional[Dict]) -> Optional[EngineConfig]:
 @dataclass
 class ReplicaSpec:
     """Declarative replica-process recipe: everything the child needs to
-    build its ``Router`` (worker ``run`` callables never cross the
-    boundary — the child hosts an echo worker with an optional CPU spin,
-    the scale-out benchmark's stand-in for real per-batch work)."""
+    build its ``Router`` — locally spawned or adopted from a remote
+    host. Worker ``run`` callables never cross the boundary: the child
+    hosts either an echo worker with an optional CPU spin
+    (``execute="echo"``, the scale-out benchmark's stand-in) or a real
+    ``SubnetExecutor`` built from ``arch``'s reduced config
+    (``execute="real"``)."""
 
     profile: Dict[str, Any]             # profile_to_wire output
     policy: str                         # ALL_POLICIES key
@@ -306,6 +371,10 @@ class ReplicaSpec:
     work_ms: float = 0.0                # synthetic per-batch CPU spin
     host_devices: int = 0               # XLA fake-device pinning (0 = off)
     heartbeat_s: float = HEARTBEAT_S
+    execute: str = "echo"               # "echo" | "real" (SubnetExecutor)
+    arch: Optional[str] = None          # execute="real": config registry key
+    seq_len: int = 16                   # execute="real": tokens per payload
+    seed: int = 0                       # execute="real": supernet init seed
 
     def to_wire(self) -> Dict[str, Any]:
         return asdict(self)
@@ -322,10 +391,14 @@ class _ProxyResidency:
     """The slice of ``ResidencyTracker`` the coordinator reads on a
     remote replica: worker count/ids for the decommission rule
     (``should_decommission``: a replica with no workers can never serve)
-    and the aggregate switch counters (refreshed from child stats)."""
+    the aggregate switch counters (refreshed from child stats), and the
+    cluster's ``ActuationModel`` so the autoscaler can derive replica
+    cold start (``AutoscaleConfig.cold_start=None``) exactly as it does
+    from an inproc engine's tracker."""
 
-    def __init__(self, n_workers: int):
+    def __init__(self, n_workers: int, model: ActuationModel):
         self._wids = list(range(n_workers))
+        self.model = model
         self.n_switches = 0
         self.n_launches = 0
         self.actuation_seconds = 0.0
@@ -347,20 +420,21 @@ class _ProxyResidency:
 class ReplicaProxy:
     """Coordinator-side stand-in for a remote replica's engine.
 
-    Satisfies exactly the surface ``ClusterCoordinator`` consumes —
-    ``admit`` / ``fault`` / ``surrender_queue`` / ``abandon_pending``,
-    the residency view, and the placement introspection methods. All
-    introspection is the *parent's* view (master queries pending on the
-    replica), not the child's live queue state: round_robin placement is
-    exact; load-aware placements see pending counts (documented limit).
-    Scheduling still happens only in the child's engine."""
+    Satisfies exactly the surface ``ClusterCoordinator`` (and the
+    ``ClusterAutoscaler`` riding it) consumes — ``admit`` / ``fault`` /
+    ``surrender_queue`` / ``abandon_pending``, the residency view, and
+    the placement introspection methods. All introspection is the
+    *parent's* view (master queries pending on the replica), not the
+    child's live queue state: round_robin placement is exact; load-aware
+    placements and scaling signals see pending counts (documented
+    limit). Scheduling still happens only in the child's engine."""
 
     def __init__(self, replica_id: int, n_workers: int,
                  profile: LatencyProfile, front: "ProcClusterRouter"):
         self.replica_id = replica_id
         self.profile = profile
         self.min_service = float(profile.lat.min())
-        self.residency = _ProxyResidency(n_workers)
+        self.residency = _ProxyResidency(n_workers, front._actuation_model)
         self.n_joins = 0
         self.pending: Dict[int, Query] = {}     # qid -> outstanding master q
         self.child_stats: Optional[Dict[str, Any]] = None
@@ -432,9 +506,11 @@ class ReplicaProxy:
 
 class _Channel:
     """Parent-side bookkeeping for one replica process: subprocess
-    handle, frame stream, sync-callable outbox, and its asyncio tasks."""
+    handle (None for replicas adopted from a remote host — their
+    lifetime belongs to that host), frame stream, sync-callable outbox,
+    and its asyncio tasks."""
 
-    def __init__(self, rid: int, proc: subprocess.Popen):
+    def __init__(self, rid: int, proc: Optional[subprocess.Popen] = None):
         self.rid = rid
         self.proc = proc
         self.stream: Optional[FrameStream] = None
@@ -451,7 +527,7 @@ class _Channel:
         self.tasks.clear()
         if self.stream is not None:
             self.stream.close()
-        if kill and self.proc.poll() is None:
+        if kill and self.proc is not None and self.proc.poll() is None:
             self.proc.kill()
 
 
@@ -468,7 +544,9 @@ def spawn_replica_proc(spec: ReplicaSpec) -> subprocess.Popen:
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` when the spec
     pins fake devices) — set *before* the child ever imports jax, which
     is the whole point of the process split on CPU CI. The parent-side
-    socket rides on ``proc._ipc_sock``."""
+    socket rides on ``proc._ipc_sock``. The inherited fd is trusted:
+    no handshake (only a process the coordinator itself spawned can
+    hold the other end)."""
     import socket as socketlib
 
     from repro.compat import host_devices_env   # deferred: imports jax
@@ -483,6 +561,22 @@ def spawn_replica_proc(spec: ReplicaSpec) -> subprocess.Popen:
     return proc
 
 
+def spawn_replica_proc_tcp(spec: ReplicaSpec, addr: Tuple[str, int],
+                           token: str) -> subprocess.Popen:
+    """Start one replica worker process that dials the coordinator's
+    TCP listener and authenticates — the same spawn path a remote host
+    runs by hand (``replica_proc --connect HOST:PORT --token ...``).
+    The token travels in the child env (``REPRO_IPC_TOKEN``), never on
+    argv, so it stays out of process listings."""
+    from repro.compat import host_devices_env   # deferred: imports jax
+    env = host_devices_env(spec.host_devices, PYTHONPATH=_src_root())
+    env[TOKEN_ENV] = token
+    host, port = addr
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.serving.replica_proc",
+         "--connect", f"{host}:{port}"], env=env)
+
+
 # -- the proc-transport cluster front door ---------------------------------
 
 
@@ -490,32 +584,36 @@ class ProcClusterRouter(ClusterRouter):
     """``ClusterRouter`` with ``transport="proc"``: same public surface
     (``start`` / ``submit`` / ``kill_worker`` / ``kill_replica`` /
     ``drain`` / ``stats`` / ``records``), but every replica group is a
-    separate OS process serving frames through ``replica_proc.py``.
+    separate OS process serving frames through ``replica_proc.py`` —
+    over inherited socketpairs, or over TCP with ``listen="HOST:PORT"``
+    (port 0 picks a free one; resolved address in ``listen_addr``, the
+    shared token in ``token``, auto-generated when not given).
 
     The coordinator (this process) remains the sole owner of admission,
     placement, and lifecycle; the transport is a thin shim — serialize
     the payload, forward the placement decision as a ``submit`` frame,
     stream ``completion`` frames back onto the master queries. Replica
     death (kill, EOF, heartbeat loss) funnels into
-    ``ClusterCoordinator.redistribute`` exactly like inproc."""
+    ``ClusterCoordinator.redistribute`` exactly like inproc, and the
+    live autoscaler drives spawn/decommission through the same
+    coordinator hooks as the inproc plane."""
 
     def __init__(self, profile: LatencyProfile, policy: Policy,
                  replicas: Sequence, clock=None,
                  engine_cfg: Optional[EngineConfig] = None,
                  placement: str = "round_robin", placement_seed: int = 0,
-                 autoscale=None, worker_factory=None, slo: float = 0.036,
+                 autoscale: Optional[AutoscaleConfig] = None,
+                 worker_factory=None, slo: float = 0.036,
                  forecast: Optional[ForecastConfig] = None,
                  transport: str = "proc", work_ms: float = 0.0,
                  host_devices: int = 0, heartbeat_s: float = HEARTBEAT_S,
-                 spawn_timeout: float = 60.0):
+                 spawn_timeout: float = 60.0,
+                 listen: Optional[str] = None, token: Optional[str] = None,
+                 execute: str = "echo", arch: Optional[str] = None,
+                 seq_len: int = 16, seed: int = 0):
         if transport != "proc":
             raise ValueError(f"ProcClusterRouter is the proc transport "
                              f"(got transport={transport!r})")
-        if autoscale is not None:
-            raise ValueError(
-                "transport='proc' has no live autoscaler yet: replica "
-                "lifecycle over IPC is the fixed spawn set plus deaths "
-                "(ROADMAP multi-host item)")
         if clock is not None and not isinstance(clock, WallClock):
             raise ValueError("the proc transport is wall-clock only "
                              "(virtual parity runs stay inproc)")
@@ -524,6 +622,18 @@ class ProcClusterRouter(ClusterRouter):
                 f"policy {type(policy).__name__} is not registry-"
                 f"constructible (ALL_POLICIES[{policy.name!r}]()); the "
                 f"replica process rebuilds policies by name")
+        if execute not in ("echo", "real"):
+            raise ValueError(f"execute must be 'echo' or 'real', "
+                             f"got {execute!r}")
+        if execute == "real" and not arch:
+            raise ValueError(
+                "execute='real' needs arch=<config registry name>: the "
+                "child builds its SubnetExecutor from "
+                "get_config(arch).reduced() — build the coordinator's "
+                "profile from the same reduced config")
+        if token is not None and listen is None:
+            raise ValueError("token only applies with listen= "
+                             "(socketpair children inherit a trusted fd)")
         self.profile = profile
         self.clock = clock if clock is not None else WallClock()
         counts = [len(g) if isinstance(g, (list, tuple)) else int(g)
@@ -533,51 +643,300 @@ class ProcClusterRouter(ClusterRouter):
         self.spec = ReplicaSpec(
             profile=profile_to_wire(profile), policy=policy.name,
             engine_cfg=engine_cfg_to_wire(engine_cfg), work_ms=work_ms,
-            host_devices=host_devices, heartbeat_s=heartbeat_s)
+            host_devices=host_devices, heartbeat_s=heartbeat_s,
+            execute=execute, arch=arch, seq_len=seq_len, seed=seed)
         self._counts = counts
         self._spawn_timeout = spawn_timeout
+        # the TCP front door: parsed listen request, resolved address
+        # after _start_listener, the shared HMAC token, and the pairing
+        # queues matching authenticated connections to spawn/adopt calls
+        self._listen_req: Optional[Tuple[str, int]] = None
+        if listen is not None:
+            host, _, port = str(listen).rpartition(":")
+            if not host or not port.lstrip("-").isdigit():
+                raise ValueError(f"listen must be 'HOST:PORT', "
+                                 f"got {listen!r}")
+            self._listen_req = (host, int(port))
+        self.token = token
+        if self._listen_req is not None and self.token is None:
+            self.token = secrets.token_hex(16)
+        self._server: Optional[asyncio.AbstractServer] = None
+        self.listen_addr: Optional[Tuple[str, int]] = None
+        self.handshake_rejects = 0
+        self._pending_conns: Deque[FrameStream] = deque()
+        self._conn_waiters: Deque[asyncio.Future] = deque()
+        # the cluster's one ActuationModel (residency.py): proxies carry
+        # it so autoscaler cold-start derivation works over proc too
+        ecfg = engine_cfg or EngineConfig()
+        self._actuation_model = ActuationModel(
+            actuation_delay=ecfg.actuation_delay,
+            load_on_switch=ecfg.load_on_switch, hw=ecfg.hw)
         self.proxies = [ReplicaProxy(rid, n, profile, self)
                         for rid, n in enumerate(counts)]
         self.coord = ClusterCoordinator(
             self.proxies, make_placement(placement),
             placement_seed=placement_seed,
-            forecast=coordinator_forecast(None, forecast))
+            forecast=coordinator_forecast(autoscale, forecast))
         self.autoscaler = None
         self._autoscale_errors = 0
-        self._scale_task = None
+        self._scale_task: Optional[asyncio.Task] = None
+        self._spawn_workers = counts[0]
+        if autoscale is not None:
+            if len(counts) > autoscale.max_replicas:
+                raise ValueError(
+                    f"{len(counts)} initial replicas exceed "
+                    f"max_replicas={autoscale.max_replicas}")
+            if autoscale.spawn_workers is None and len(set(counts)) > 1:
+                raise ValueError(
+                    "heterogeneous worker pools need an explicit "
+                    "AutoscaleConfig.spawn_workers")
+            if autoscale.spawn_workers:
+                self._spawn_workers = autoscale.spawn_workers
+            self.autoscaler = ClusterAutoscaler(
+                self.coord, autoscale, self._spawn_proxy, slo=slo,
+                migrate_fn=self._on_decommission)
         self._qid = 0
         self._started = False
         self._closing = False
         self._chans: List[_Channel] = []
         self._futs: Dict[int, asyncio.Future] = {}
         self._payloads: Dict[int, Any] = {}
+        # qid index over the master list: drain resolves leftovers via
+        # this instead of a linear scan of coord.queries per qid
+        self._by_qid: Dict[int, Query] = {}
         self._all_done = asyncio.Event()
         self._all_done.set()
 
     # -- lifecycle ------------------------------------------------------
 
     async def start(self) -> None:
-        loop = asyncio.get_running_loop()
-        for rid, n in enumerate(self._counts):
-            spec = ReplicaSpec(**{**self.spec.to_wire(), "n_workers": n})
-            proc = spawn_replica_proc(spec)
-            ch = _Channel(rid, proc)
-            self._chans.append(ch)
-            sock = proc._ipc_sock               # type: ignore[attr-defined]
-            reader, writer = await asyncio.open_connection(sock=sock)
-            ch.stream = FrameStream(reader, writer)
-            await ch.stream.send(
-                {"t": "config", "rid": rid, "spec": spec.to_wire()})
-            hello = await asyncio.wait_for(ch.stream.recv(),
-                                           timeout=self._spawn_timeout)
-            if hello is None or hello.get("t") != "hello":
-                raise MalformedFrame(
-                    f"replica {rid}: expected hello, got {hello!r}")
-            ch.hello = hello
-            ch.tasks = [loop.create_task(self._send_loop(ch)),
-                        loop.create_task(self._read_loop(ch)),
-                        loop.create_task(self._watchdog(ch))]
+        if self._listen_req is not None:
+            await self._start_listener()
+        for rid in range(len(self._counts)):
+            self._chans.append(_Channel(rid))
+            await self._connect_child(rid)
         self._started = True
+        if self.autoscaler is not None:
+            self.autoscaler.anchor(self.clock.now())
+            self._scale_task = asyncio.get_running_loop().create_task(
+                self._autoscale_loop())
+
+    async def _start_listener(self) -> Tuple[str, int]:
+        """Open the TCP front door (idempotent); resolves port 0 to the
+        kernel-assigned port and returns the bound address."""
+        if self._server is None:
+            host, port = self._listen_req
+            self._server = await asyncio.start_server(
+                self._on_tcp_connect, host, port)
+            sockname = self._server.sockets[0].getsockname()
+            self.listen_addr = (sockname[0], int(sockname[1]))
+        return self.listen_addr
+
+    async def _on_tcp_connect(self, reader: asyncio.StreamReader,
+                              writer: asyncio.StreamWriter) -> None:
+        """Accept path: challenge/auth handshake, then hand the stream
+        to whichever spawn/adopt call is waiting for a child (or park
+        it for the next one). Rejected peers never reach pairing."""
+        stream = FrameStream(reader, writer)
+        nonce = secrets.token_hex(16)
+        try:
+            await stream.send({"t": "challenge", "nonce": nonce,
+                               "version": PROTOCOL_VERSION})
+            auth = await asyncio.wait_for(stream.recv(),
+                                          timeout=HANDSHAKE_TIMEOUT_S)
+        except (FrameError, ConnectionError, OSError,
+                asyncio.TimeoutError):
+            stream.close()
+            return
+        ok, reason = self._verify_auth(auth, nonce)
+        if not ok:
+            self.handshake_rejects += 1
+            try:
+                await stream.send({"t": "reject", "reason": reason})
+            except (ConnectionError, OSError, RuntimeError):
+                pass
+            stream.close()
+            return
+        while self._conn_waiters:
+            fut = self._conn_waiters.popleft()
+            if not fut.done():
+                fut.set_result(stream)
+                return
+        self._pending_conns.append(stream)
+
+    def _verify_auth(self, auth: Optional[Dict[str, Any]],
+                     nonce: str) -> Tuple[bool, str]:
+        if auth is None or auth.get("t") != "auth":
+            return False, f"expected an auth frame, got {auth!r}"
+        if auth.get("version") != PROTOCOL_VERSION:
+            return False, (
+                f"protocol version mismatch: coordinator speaks "
+                f"{PROTOCOL_VERSION}, peer sent {auth.get('version')!r}")
+        mac = auth.get("mac")
+        if not isinstance(mac, str) or not hmac.compare_digest(
+                mac, auth_mac(self.token, nonce)):
+            return False, "bad or missing token (HMAC mismatch)"
+        return True, ""
+
+    async def _await_child_conn(self, timeout: float) -> FrameStream:
+        if self._pending_conns:
+            return self._pending_conns.popleft()
+        fut = asyncio.get_running_loop().create_future()
+        self._conn_waiters.append(fut)
+        return await asyncio.wait_for(fut, timeout)
+
+    async def _connect_child(self, rid: int) -> None:
+        """Bring replica ``rid``'s child up on the configured transport:
+        fork over a socketpair, or fork-and-dial through the TCP
+        listener (same handshake a remote child passes)."""
+        ch = self._chans[rid]
+        spec = ReplicaSpec(**{**self.spec.to_wire(),
+                              "n_workers": self._counts[rid]})
+        if self._listen_req is None:
+            ch.proc = spawn_replica_proc(spec)
+            sock = ch.proc._ipc_sock        # type: ignore[attr-defined]
+            reader, writer = await asyncio.open_connection(sock=sock)
+            stream = FrameStream(reader, writer)
+        else:
+            ch.proc = spawn_replica_proc_tcp(spec, self.listen_addr,
+                                             self.token)
+            stream = await self._await_child_conn(self._spawn_timeout)
+        await self._attach(ch, stream, spec)
+
+    async def _attach(self, ch: _Channel, stream: FrameStream,
+                      spec: ReplicaSpec) -> None:
+        """Shared spawn/adopt tail: config/hello exchange, then the
+        channel's pump tasks take over the stream."""
+        ch.stream = stream
+        await stream.send(
+            {"t": "config", "rid": ch.rid, "spec": spec.to_wire()})
+        hello = await asyncio.wait_for(stream.recv(),
+                                       timeout=self._spawn_timeout)
+        if hello is None or hello.get("t") != "hello":
+            raise MalformedFrame(
+                f"replica {ch.rid}: expected hello, got {hello!r}")
+        ch.hello = hello
+        loop = asyncio.get_running_loop()
+        ch.tasks = [loop.create_task(self._send_loop(ch)),
+                    loop.create_task(self._read_loop(ch)),
+                    loop.create_task(self._watchdog(ch))]
+
+    async def adopt_replica(self, n_workers: int = 1,
+                            timeout: Optional[float] = None) -> int:
+        """Admit a REMOTE child into the cluster: wait for the next
+        authenticated TCP connection (a ``replica_proc --connect``
+        started on another host), register it as a new ready replica,
+        and return its rid. The adopted process belongs to its own
+        host — ``kill_replica``/shutdown close its stream rather than
+        SIGKILLing a pid the coordinator doesn't own."""
+        if self._listen_req is None:
+            raise ValueError("adopt_replica needs listen= (the TCP "
+                             "front door remote children dial)")
+        await self._start_listener()
+        stream = await self._await_child_conn(
+            timeout if timeout is not None else self._spawn_timeout)
+        rid = len(self.proxies)
+        self._counts.append(n_workers)
+        proxy = ReplicaProxy(rid, n_workers, self.profile, self)
+        self.proxies.append(proxy)
+        ch = _Channel(rid)
+        self._chans.append(ch)
+        self.coord.add_replica(proxy, ready=True)
+        if self.autoscaler is not None:
+            # adopted capacity bills from adoption (span parallels the
+            # autoscaler's own spawns so replica_spans stays total)
+            self.autoscaler._spans.setdefault(
+                rid, [self.clock.now(), None])
+        spec = ReplicaSpec(**{**self.spec.to_wire(),
+                              "n_workers": n_workers})
+        await self._attach(ch, stream, spec)
+        return rid
+
+    # -- live autoscaling (coordinator-owned lifecycle) -----------------
+
+    def _spawn_proxy(self, rid: int) -> ReplicaProxy:
+        """Autoscaler ``engine_factory``: register the coordinator-side
+        stand-in synchronously (the autoscaler's spawn bookkeeping is
+        sync); the control loop forks/connects the actual child right
+        after the tick returns."""
+        assert len(self.proxies) == rid == len(self._chans)
+        self._counts.append(self._spawn_workers)
+        proxy = ReplicaProxy(rid, self._spawn_workers, self.profile, self)
+        self.proxies.append(proxy)
+        self._chans.append(_Channel(rid))
+        return proxy
+
+    async def _autoscale_loop(self) -> None:
+        """Live control loop: the proc twin of the inproc
+        ``ClusterRouter._autoscale_loop``. Spawn events fork/connect a
+        replica process, then schedule activation at ``ready_at`` — a
+        spawned replica turns routable only once BOTH the cold start
+        has elapsed and its child finished the handshake. Tick errors
+        are counted (``stats()['autoscale_errors']``) and tolerated up
+        to ``AUTOSCALE_MAX_CONSEC`` consecutive failures."""
+        cfg = self.autoscaler.cfg
+        loop = asyncio.get_running_loop()
+        consecutive = 0
+        while True:
+            await asyncio.sleep(cfg.interval)
+            try:
+                for ev in self.autoscaler.tick(self.clock.now()):
+                    if ev.kind == "spawn":
+                        try:
+                            await self._connect_child(ev.rid)
+                        except Exception:
+                            # stillborn child: never routable — book the
+                            # death so it can't warm (and bill) forever
+                            self.coord.alive[ev.rid] = False
+                            self.autoscaler.on_death(ev.rid,
+                                                     self.clock.now())
+                            raise
+                        loop.call_later(
+                            max(ev.ready_at - self.clock.now(), 0.0),
+                            self._activate, ev.rid)
+                    # decommission: tick already re-routed the queue and
+                    # asked the child to drain via _on_decommission
+                consecutive = 0
+            except Exception:           # noqa: BLE001 — keep scaling alive
+                traceback.print_exc()
+                self._autoscale_errors += 1
+                consecutive += 1
+                if consecutive >= self.AUTOSCALE_MAX_CONSEC:
+                    raise
+
+    def _activate(self, rid: int) -> None:
+        """Cold start paid: the spawned replica becomes routable (a
+        replica that died mid-warm-up stays down)."""
+        if self.coord.alive[rid]:
+            self.autoscaler.activate(rid, self.clock.now())
+
+    def _on_decommission(self, rid: int, moved) -> None:
+        """Autoscaler ``migrate_fn``: payloads and futures live parent-
+        side keyed by qid, so nothing migrates — the redistribute that
+        preceded this call already re-serialized the orphans to the
+        survivors through ``ReplicaProxy.admit``. What remains is the
+        child's retirement: a ``drain`` frame (its in-flight batches
+        finish; their completions arrive stale and are ignored), then a
+        background reap."""
+        ch = self._chans[rid]
+        if ch.stream is not None:
+            ch.outbox.put_nowait({"t": "drain", "timeout": 10.0})
+            try:
+                asyncio.get_running_loop().create_task(self._reap(ch))
+            except RuntimeError:
+                ch.stop()               # no loop: hard stop
+
+    async def _reap(self, ch: _Channel) -> None:
+        try:
+            await asyncio.wait_for(ch.drained.wait(), timeout=15.0)
+        except asyncio.TimeoutError:
+            pass
+        ch.stop()
+        if ch.proc is not None:
+            try:
+                await asyncio.to_thread(ch.proc.wait, 5.0)
+            except subprocess.TimeoutExpired:
+                ch.proc.kill()
 
     # -- admission (coordinator-owned, frame-forwarded) -----------------
 
@@ -594,6 +953,7 @@ class ProcClusterRouter(ClusterRouter):
             return fut
         self._futs[q.qid] = fut
         self._payloads[q.qid] = payload
+        self._by_qid[q.qid] = q
         self._all_done.clear()
         rid = self.coord.select(q, now)
         self.proxies[rid].admit(q)
@@ -677,6 +1037,7 @@ class ProcClusterRouter(ClusterRouter):
 
     def _resolve(self, qid: int, result) -> None:
         self._payloads.pop(qid, None)
+        self._by_qid.pop(qid, None)
         fut = self._futs.pop(qid, None)
         if fut is not None and not fut.done():
             fut.set_result(result)
@@ -688,18 +1049,38 @@ class ProcClusterRouter(ClusterRouter):
         heartbeat loss) into the coordinator's one surrender path:
         ``redistribute`` re-routes the orphans through placement, the
         proxies' ``admit`` re-serializes them to the survivors. With no
-        survivor left the orphans drop — their futures still resolve."""
+        survivor left the orphans drop — their futures still resolve.
+
+        During shutdown (``drain`` in flight, ``_closing`` set) the
+        redistribute is skipped: the "survivors" have already acked
+        ``drained`` and exited their serve loops, so re-routed submit
+        frames would vanish into dead sockets and sit unresolved until
+        the drain timeout misclassified them as ``timed_out``. Shutdown
+        orphans resolve immediately as dropped shutdown loss instead
+        (``timed_out`` stays False: they were lost to a death, not to
+        the drain deadline)."""
         ch = self._chans[rid]
         ch.stop()
         if not self.coord.alive[rid]:
             return
         proxy = self.proxies[rid]
         proxy.residency.clear()         # no workers left on a dead peer
+        if self._closing:
+            self.coord.alive[rid] = False
+            for q in list(proxy.pending.values()):
+                q.dropped = True
+                self._resolve(q.qid, (None, 0.0))
+            proxy.pending.clear()
+            return
         snapshot = list(proxy.pending.values())
         self.coord.redistribute(rid, self.clock.now())
         for q in snapshot:
             if q.dropped:               # no survivors took it
                 self._resolve(q.qid, (None, 0.0))
+        if self.autoscaler is not None:
+            # mirror the inproc _book_death: close the billing span and
+            # forget a still-warming victim
+            self.autoscaler.on_death(rid, self.clock.now())
 
     # -- fault injection -------------------------------------------------
 
@@ -714,10 +1095,15 @@ class ProcClusterRouter(ClusterRouter):
             self._chans[rid].outbox.put_nowait({"t": "kill", "wid": wid})
 
     def kill_replica(self, rid: int) -> None:
-        """Hard replica death: SIGKILL the process, then drain-and-
-        re-route immediately (the EOF path then finds it already
-        dead and no-ops)."""
-        self._chans[rid].proc.kill()
+        """Hard replica death: SIGKILL the process (close the stream
+        for adopted replicas — their pid belongs to another host), then
+        drain-and-re-route immediately (the EOF path then finds it
+        already dead and no-ops)."""
+        ch = self._chans[rid]
+        if ch.proc is not None:
+            ch.proc.kill()
+        elif ch.stream is not None:
+            ch.stream.close()
         self._on_death(rid, "killed")
 
     # -- shutdown --------------------------------------------------------
@@ -728,9 +1114,12 @@ class ProcClusterRouter(ClusterRouter):
         deadline resolve as dropped AND ``timed_out`` — the same
         shutdown-loss marking as the inproc ``Router.drain``."""
         self._closing = True
+        if self._scale_task is not None:
+            self._scale_task.cancel()
+            self._scale_task = None
         deadline = time.monotonic() + timeout
         for ch in self._chans:
-            if self.coord.alive[ch.rid]:
+            if self.coord.alive[ch.rid] and ch.stream is not None:
                 ch.outbox.put_nowait({"t": "drain", "timeout": timeout})
         try:
             await asyncio.wait_for(self._all_done.wait(),
@@ -740,7 +1129,7 @@ class ProcClusterRouter(ClusterRouter):
         except asyncio.TimeoutError:
             expired = True
         for ch in self._chans:
-            if self.coord.alive[ch.rid]:
+            if self.coord.alive[ch.rid] and ch.stream is not None:
                 try:
                     await asyncio.wait_for(
                         ch.drained.wait(),
@@ -748,7 +1137,7 @@ class ProcClusterRouter(ClusterRouter):
                 except asyncio.TimeoutError:
                     pass
         for qid in list(self._futs):
-            q = next((x for x in self.coord.queries if x.qid == qid), None)
+            q = self._by_qid.get(qid)
             if q is not None:
                 q.dropped = True
                 q.timed_out = expired
@@ -757,17 +1146,27 @@ class ProcClusterRouter(ClusterRouter):
             proxy.pending.clear()
         for ch in self._chans:
             ch.stop()
-            try:
-                ch.proc.wait(timeout=5.0)
-            except subprocess.TimeoutExpired:
-                ch.proc.kill()
+            if ch.proc is not None:
+                try:
+                    ch.proc.wait(timeout=5.0)
+                except subprocess.TimeoutExpired:
+                    ch.proc.kill()
+        for fut in self._conn_waiters:
+            fut.cancel()
+        self._conn_waiters.clear()
+        for stream in self._pending_conns:
+            stream.close()
+        self._pending_conns.clear()
+        if self._server is not None:
+            self._server.close()
+            self._server = None
 
     async def refresh_stats(self, timeout: float = 5.0) -> None:
         """Pull live counters from every alive child into the proxies,
         so the inherited ``stats()`` aggregates real child numbers."""
         waits = []
         for ch in self._chans:
-            if self.coord.alive[ch.rid]:
+            if self.coord.alive[ch.rid] and ch.stream is not None:
                 ch.stats_ready.clear()
                 ch.outbox.put_nowait({"t": "stats"})
                 waits.append(ch.stats_ready.wait())

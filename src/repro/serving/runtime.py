@@ -383,8 +383,10 @@ class ClusterRouter:
         # transport switch: "inproc" (default) keeps every replica in
         # this process; "proc" dispatches to serving/ipc.py's
         # ProcClusterRouter — one OS process per replica group behind
-        # the IPC front door, same public surface, same coordinator
-        # ownership of admission/placement/lifecycle.
+        # the IPC front door (socketpair locally, or TCP with
+        # listen=/token= for remote replicas), same public surface,
+        # same coordinator ownership of admission/placement/lifecycle,
+        # including the live autoscaler.
         transport = kwargs.get("transport", "inproc")
         if transport not in ("inproc", "proc"):
             raise ValueError(f"unknown transport {transport!r}; "
